@@ -1,0 +1,28 @@
+"""Fig. 9: slowdown vs the contention-free bound (every kernel at solo
+speed even when overlapped) — how much space-sharing contention costs."""
+from __future__ import annotations
+
+from repro.benchsuite import BENCHMARKS, GTX1660S
+from repro.benchsuite import costmodel
+
+from .common import emit, run_sim
+
+
+def main() -> list:
+    rows = []
+    gpu = GTX1660S
+    for bname, bench in BENCHMARKS.items():
+        tp, _, _ = run_sim(bench, gpu, "parallel")
+        costmodel.OCCUPANCY_SCALE = 0.0          # contention-free bound
+        try:
+            tfree, _, _ = run_sim(bench, gpu, "parallel")
+        finally:
+            costmodel.OCCUPANCY_SCALE = 1.0
+        rows.append((f"fig9/{bname}", tp * 1e6,
+                     f"relative_to_contention_free={tfree / tp:.3f}"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Table I: benchmark memory footprints across input scales/GPUs."""
+from __future__ import annotations
+
+from repro.benchsuite import BENCHMARKS, GPUS
+
+from .common import emit
+
+
+def main() -> list:
+    rows = []
+    for bname, bench in BENCHMARKS.items():
+        for scale in (0.02, 0.1, 0.5, 1.0):
+            fb = bench.footprint_bytes(scale)
+            fits = ",".join(g for g, spec in GPUS.items()
+                            if fb <= spec.mem_gb * 0.9 * 2 ** 30)
+            rows.append((f"table1/{bname}/scale{scale}", 0.0,
+                         f"footprint_gb={fb / 2 ** 30:.2f};fits=[{fits}]"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Fig. 8: runtime scheduler vs hand-optimized scheduling (CUDA-Graphs
+analogue = oracle with the full DAG known in advance, zero overhead)."""
+from __future__ import annotations
+
+from repro.benchsuite import BENCHMARKS, GPUS
+
+from .common import emit, run_sim
+
+
+def main() -> list:
+    rows = []
+    for gname, gpu in GPUS.items():
+        for bname, bench in BENCHMARKS.items():
+            tp, _, _ = run_sim(bench, gpu, "parallel")
+            to, _, _ = run_sim(bench, gpu, "parallel", oracle=True)
+            rows.append((f"fig8/{gname}/{bname}", tp * 1e6,
+                         f"oracle_over_runtime={to / tp:.4f}"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Fig. 10/11: overlap decomposition (CT / TC / CC / TOT) per benchmark,
+serial vs parallel scheduling."""
+from __future__ import annotations
+
+from repro.benchsuite import BENCHMARKS, GTX1660S
+
+from .common import emit, run_sim
+
+
+def main() -> list:
+    rows = []
+    for bname, bench in BENCHMARKS.items():
+        for policy in ("serial", "parallel"):
+            t, m, _ = run_sim(bench, GTX1660S, policy)
+            rows.append((f"fig11/{bname}/{policy}", t * 1e6,
+                         f"CT={m['CT']:.2f};TC={m['TC']:.2f};"
+                         f"CC={m['CC']:.2f};TOT={m['TOT']:.2f}"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

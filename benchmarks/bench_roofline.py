@@ -1,0 +1,46 @@
+"""§Roofline: read the dry-run JSONs and print the per-(arch x shape x mesh)
+three-term roofline table."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import emit
+
+RESULTS = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "results", "dryrun")
+
+
+def main() -> list:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        with open(path) as f:
+            res = json.load(f)
+        tag = os.path.basename(path)[:-5]
+        if "skipped" in res:
+            rows.append((f"roofline/{tag}", 0.0, f"skipped={res['skipped'][:40]}"))
+            continue
+        if "error" in res:
+            rows.append((f"roofline/{tag}", 0.0, "ERROR"))
+            continue
+        r = res["roofline"]
+        m = res["memory"]
+        rows.append((
+            f"roofline/{tag}", r["step_time_bound_s"] * 1e6,
+            f"compute_ms={r['compute_s'] * 1e3:.1f};"
+            f"memory_ms={r['memory_s'] * 1e3:.1f};"
+            f"collective_ms={r['collective_s'] * 1e3:.1f};"
+            f"dominant={r['dominant']};"
+            f"roofline_frac={r['roofline_fraction']:.3f};"
+            f"useful_flops_ratio={r['useful_flops_ratio']:.2f};"
+            f"hbm_frac={m['hbm_fraction']:.2f}"))
+    if not rows:
+        rows.append(("roofline/none", 0.0,
+                     "no dry-run results; run python -m repro.launch.dryrun"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Fig. 7: parallel-scheduler speedup over the serial GrCUDA scheduler,
+per benchmark x GPU (simulated on the calibrated cost model)."""
+from __future__ import annotations
+
+from repro.benchsuite import BENCHMARKS, GPUS
+
+from .common import emit, geomean, run_sim
+
+
+def main() -> list:
+    rows = []
+    per_gpu = {}
+    for gname, gpu in GPUS.items():
+        speedups = []
+        for bname, bench in BENCHMARKS.items():
+            ts, _, _ = run_sim(bench, gpu, "serial")
+            tp, _, _ = run_sim(bench, gpu, "parallel")
+            sp = ts / tp
+            speedups.append(sp)
+            rows.append((f"fig7/{gname}/{bname}", tp * 1e6,
+                         f"speedup_vs_serial={sp:.3f}"))
+        per_gpu[gname] = geomean(speedups)
+        rows.append((f"fig7/{gname}/geomean", 0.0,
+                     f"geomean_speedup={per_gpu[gname]:.3f}"))
+    overall = geomean(list(per_gpu.values()))
+    rows.append(("fig7/overall", 0.0,
+                 f"geomean_speedup={overall:.3f} (paper: 1.44)"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

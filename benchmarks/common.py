@@ -1,0 +1,30 @@
+"""Shared helpers for the per-figure benchmarks."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.benchsuite import BENCHMARKS, GPUS
+from repro.benchsuite.costmodel import sim_hardware
+from repro.core import make_scheduler
+
+SCALE = 0.05
+ITERS = 6
+
+
+def run_sim(bench, gpu, policy, *, oracle=False, prefetch=True,
+            scale=SCALE, iters=ITERS):
+    """One simulated run; returns (makespan_s, overlap_metrics, sched)."""
+    s = make_scheduler(policy, simulate=True,
+                       hw=sim_hardware(gpu, policy, prefetch), oracle=oracle)
+    bench.build(s, bench.make_data(scale), gpu=gpu, iters=iters)
+    return s.timeline.makespan, s.timeline.overlap_metrics(), s
+
+
+def geomean(vals):
+    return float(np.exp(np.mean(np.log(np.asarray(vals)))))
+
+
+def emit(rows):
+    """Print ``name,us_per_call,derived`` CSV rows."""
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

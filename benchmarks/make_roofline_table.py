@@ -1,0 +1,79 @@
+"""Generate the §Roofline markdown table from results/dryrun and append it
+to EXPERIMENTS.md (idempotent: replaces the generated block)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+RESULTS = os.path.join(ROOT, "results", "dryrun")
+EXP = os.path.join(ROOT, "EXPERIMENTS.md")
+BEGIN = "<!-- ROOFLINE-TABLE:BEGIN -->"
+END = "<!-- ROOFLINE-TABLE:END -->"
+
+
+def build_table() -> str:
+    lines = [
+        BEGIN,
+        "",
+        "### Single-pod (16x16) baseline table — all 40 cells",
+        "",
+        "| arch | shape | fits HBM | compute (ms) | memory (ms) |"
+        " collective (ms) | dominant | roofline frac |"
+        " useful-FLOPs ratio |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    multi_rows = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        res = json.load(open(path))
+        tag = os.path.basename(path)[:-5]
+        arch, shape, meshk = tag.rsplit("__", 2)
+        if "skipped" in res:
+            row = (f"| {arch} | {shape} | — | — | — | — | skip | — | — |"
+                   f" <!-- {res['skipped'][:60]} -->")
+            (lines if meshk == "single" else multi_rows).append(row)
+            continue
+        if "error" in res:
+            row = f"| {arch} | {shape} | ERROR | | | | | | |"
+            (lines if meshk == "single" else multi_rows).append(row)
+            continue
+        r, m = res["roofline"], res["memory"]
+        if m["fits_hbm"]:
+            fits = "yes"
+        else:
+            fits = "**no** ({:.1f}x)".format(m["hbm_fraction"])
+        row = (f"| {arch} | {shape} | {fits} | "
+               f"{r['compute_s']*1e3:.1f} | {r['memory_s']*1e3:.1f} | "
+               f"{r['collective_s']*1e3:.1f} | {r['dominant'].replace('_s','')} | "
+               f"{r['roofline_fraction']:.3f} | {r['useful_flops_ratio']:.2f} |")
+        (lines if meshk == "single" else multi_rows).append(row)
+
+    lines += ["", "### Multi-pod (2x16x16) — pod-axis sharding proof", "",
+              "| arch | shape | fits HBM | compute (ms) | memory (ms) |"
+              " collective (ms) | dominant | roofline frac |"
+              " useful-FLOPs ratio |",
+              "|---|---|---|---|---|---|---|---|---|"]
+    lines += multi_rows
+    lines += ["", END]
+    return "\n".join(lines)
+
+
+def main() -> None:
+    table = build_table()
+    text = open(EXP).read()
+    if BEGIN in text:
+        pre = text[:text.index(BEGIN)]
+        post = text[text.index(END) + len(END):]
+        text = pre + table + post
+    else:
+        marker = "## §Perf — hillclimbing log"
+        idx = text.index(marker)
+        text = text[:idx] + table + "\n\n" + text[idx:]
+    open(EXP, "w").write(text)
+    n = table.count("\n| ")
+    print(f"wrote roofline table ({n} rows)")
+
+
+if __name__ == "__main__":
+    main()

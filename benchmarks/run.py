@@ -1,0 +1,40 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (see DESIGN.md §7 for the mapping
+to the paper's tables/figures).
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import (bench_contention, bench_hwmetrics, bench_memory,
+                   bench_oracle, bench_overlap, bench_roofline,
+                   bench_speedup)
+
+    suites = [
+        ("Fig.7 speedup-vs-serial", bench_speedup),
+        ("Fig.8 vs-hand-optimized", bench_oracle),
+        ("Fig.9 contention", bench_contention),
+        ("Fig.11 overlap", bench_overlap),
+        ("Fig.12 hw-metrics", bench_hwmetrics),
+        ("Table.I memory", bench_memory),
+        ("Roofline (dry-run)", bench_roofline),
+    ]
+    failed = []
+    for title, mod in suites:
+        print(f"# === {title} ===")
+        try:
+            mod.main()
+        except Exception:
+            traceback.print_exc()
+            failed.append(title)
+    if failed:
+        print(f"# FAILED: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

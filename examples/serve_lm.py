@@ -1,0 +1,85 @@
+"""Serving driver: batched autoregressive decoding with prefill + KV cache,
+with *space-sharing* across concurrent request batches via the GrJAX
+scheduler (independent batches land on separate lanes — the paper's
+multi-task overlap applied to inference).
+
+    PYTHONPATH=src python examples/serve_lm.py --requests 4 --new-tokens 16
+"""
+import argparse
+import dataclasses
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import ManagedArray, const, inout, make_scheduler, out
+from repro.core.managed import ManagedValue
+from repro.models import forward_decode, forward_prefill, init_cache, init_lm
+from repro.runtime import make_decode_step, make_prefill_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3_12b")
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=True)
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    prefill = jax.jit(make_prefill_step(cfg))
+    decode = jax.jit(make_decode_step(cfg))
+
+    sched = make_scheduler("parallel")
+    params_v = ManagedValue(sched, params, name="weights")
+    rng = np.random.RandomState(0)
+    max_len = args.prompt_len + args.new_tokens
+
+    def serve_request(tokens, cache_and_out):
+        """One request batch: prefill then greedy decode (device kernel)."""
+        def kernel(p, toks, _out):
+            cache = init_cache(cfg, toks.shape[0], max_len)
+            logits, cache = prefill(p, {"tokens": toks}, cache)
+            nxt = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+            outs = [nxt]
+            pos = toks.shape[1]
+            for i in range(args.new_tokens - 1):
+                nxt, _, cache = decode(p, nxt, cache, jnp.int32(pos + i))
+                outs.append(nxt)
+            return jnp.concatenate(outs, axis=1)
+        return kernel
+
+    t0 = time.time()
+    results = []
+    for r in range(args.requests):
+        toks = sched.array(
+            rng.randint(0, cfg.vocab,
+                        (args.batch, args.prompt_len)).astype(np.int32),
+            name=f"req{r}")
+        out_toks = sched.array(
+            np.zeros((args.batch, args.new_tokens), np.int32),
+            name=f"gen{r}")
+        # independent requests share read-only weights -> separate lanes
+        sched.launch(serve_request(toks, out_toks),
+                     [const(params_v), const(toks), out(out_toks)],
+                     name=f"serve_req{r}")
+        results.append(out_toks)
+
+    texts = [np.asarray(r) for r in results]     # host reads sync per-lane
+    dt = time.time() - t0
+    total = args.requests * args.batch * args.new_tokens
+    print(f"served {args.requests} request batches "
+          f"({total} tokens) in {dt:.2f}s -> {total/dt:.1f} tok/s")
+    print("lanes used:", sched.streams.lanes_created,
+          "| events:", sched.streams.events_created)
+    for r, t in enumerate(texts[:2]):
+        print(f"req{r} sample tokens:", t[0][:8], "...")
+    sched.shutdown()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""GrJAX: runtime DAG scheduling with resource sharing (GrCUDA paper repro)
+as a multi-pod JAX training/inference framework.  See DESIGN.md."""
+
+__version__ = "1.0.0"

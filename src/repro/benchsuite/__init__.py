@@ -1,0 +1,7 @@
+"""The paper's benchmark suite (§V-B): 6 task-parallel GPU workloads."""
+from .costmodel import GPUS, GPUSpec, GTX960, GTX1660S, P100, kernel_cost, occupancy
+from .suite import BENCHMARKS, Benchmark, BS, DL, HITS, IMG, ML, VEC
+
+__all__ = ["BENCHMARKS", "Benchmark", "VEC", "BS", "IMG", "ML", "HITS", "DL",
+           "GPUS", "GPUSpec", "P100", "GTX1660S", "GTX960", "kernel_cost",
+           "occupancy"]

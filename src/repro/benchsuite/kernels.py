@@ -1,0 +1,166 @@
+"""JAX implementations of the 33 benchmark kernels (paper §V-B).
+
+Kernels are pure functions of the device values of their argument list (in
+argument order, including output placeholders) and return the new values of
+their writable arguments — the executor installs results into the
+ManagedArray handles.  Taken/derived from the open-source suites the paper
+cites (CUDA samples, LightSpMV, cuda-gaussian-blur, Kepler reduction post).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+
+# ---------------------------------------------------------------- VEC ----
+@jax.jit
+def k_square(x, _y):
+    return x * x
+
+
+@jax.jit
+def k_reduce_diff(y1, y2, _z):
+    return jnp.sum(y1 - y2)[None]
+
+
+# ---------------------------------------------------------------- B&S ----
+def _ndtr(x):
+    return 0.5 * (1.0 + lax.erf(x / jnp.sqrt(jnp.asarray(2.0, x.dtype))))
+
+
+@jax.jit
+def k_black_scholes(s, _out):
+    """European call, CUDA-samples parameterization (double precision)."""
+    dt = s.dtype
+    K = jnp.asarray(60.0, dt)
+    r = jnp.asarray(0.035, dt)
+    sigma = jnp.asarray(0.2, dt)
+    T = jnp.asarray(1.0, dt)
+    sqrt_t = jnp.sqrt(T)
+    d1 = (jnp.log(s / K) + (r + 0.5 * sigma * sigma) * T) / (sigma * sqrt_t)
+    d2 = d1 - sigma * sqrt_t
+    return s * _ndtr(d1) - K * jnp.exp(-r * T) * _ndtr(d2)
+
+
+# ---------------------------------------------------------------- IMG ----
+def _gauss_kernel(ksize: int, sigma: float) -> np.ndarray:
+    ax = np.arange(ksize) - (ksize - 1) / 2.0
+    g = np.exp(-(ax ** 2) / (2.0 * sigma ** 2))
+    k2 = np.outer(g, g)
+    return (k2 / k2.sum()).astype(np.float32)
+
+
+def _conv2d_same(img, kern):
+    """img: (H, W); kern: (k, k) — SAME padding, NCHW conv underneath."""
+    x = img[None, None]
+    w = kern[None, None]
+    y = lax.conv_general_dilated(x, w, window_strides=(1, 1), padding="SAME")
+    return y[0, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("ksize", "sigma"))
+def k_gaussian_blur(img, _out, *, ksize: int, sigma: float):
+    kern = jnp.asarray(_gauss_kernel(ksize, sigma))
+    return _conv2d_same(img, kern)
+
+
+@jax.jit
+def k_sobel(img, _out):
+    gx = jnp.asarray([[-1, 0, 1], [-2, 0, 2], [-1, 0, 1]], jnp.float32)
+    gy = gx.T
+    ex = _conv2d_same(img, gx)
+    ey = _conv2d_same(img, gy)
+    g = jnp.sqrt(ex * ex + ey * ey)
+    return g / (jnp.max(g) + 1e-6)
+
+
+@jax.jit
+def k_extend_mask(mask, _out):
+    """Dilate + normalize the edge mask (paper's `extend` kernel)."""
+    m = lax.reduce_window(mask, -jnp.inf, lax.max, (5, 5), (1, 1), "SAME")
+    lo, hi = jnp.min(m), jnp.max(m)
+    return (m - lo) / (hi - lo + 1e-6)
+
+
+@jax.jit
+def k_unsharpen(img, blur, _out):
+    return jnp.clip(img + 0.5 * (img - blur), 0.0, 1.0)
+
+
+@jax.jit
+def k_combine(sharp, blur_med, mask, _out):
+    return sharp * mask + blur_med * (1.0 - mask)
+
+
+@jax.jit
+def k_combine_low(comb, blur_low, mask, _out):
+    return comb * mask + blur_low * (1.0 - mask)
+
+
+# ----------------------------------------------------------------- ML ----
+@jax.jit
+def k_nb_scores(x, feat_logprob, class_logprior, _out):
+    """Categorical Naive-Bayes log-posteriors — the tall-matrix low-IPC
+    kernel of §V-F (rows >> classes)."""
+    return x @ feat_logprob.T + class_logprior[None, :]
+
+
+@jax.jit
+def k_ridge_scores(x, w, b, _out):
+    return x @ w.T + b[None, :]
+
+
+@jax.jit
+def k_softmax_norm(scores, _out):
+    m = jnp.max(scores, axis=1, keepdims=True)
+    e = jnp.exp(scores - m)
+    return e / jnp.sum(e, axis=1, keepdims=True)
+
+
+@jax.jit
+def k_ensemble_avg(p1, p2, _out):
+    return jnp.argmax(0.5 * (p1 + p2), axis=1).astype(jnp.int32)
+
+
+# --------------------------------------------------------------- HITS ----
+@jax.jit
+def k_spmv(vals, cols, rows, x, _y):
+    """CSR-ish SpMV (COO row index + segment_sum), LightSpMV-derived."""
+    n = _y.shape[0]
+    return jax.ops.segment_sum(vals * x[cols], rows, num_segments=n)
+
+
+@jax.jit
+def k_l2_norm(x, _out):
+    return jnp.sqrt(jnp.sum(x * x))[None]
+
+
+@jax.jit
+def k_divide(x, norm, _out):
+    return x / (norm[0] + 1e-12)
+
+
+# ----------------------------------------------------------------- DL ----
+@functools.partial(jax.jit, static_argnames=("stride",))
+def k_conv_relu_pool(x, w, _out, *, stride: int = 1):
+    """x: (N,C,H,W), w: (O,C,k,k) -> conv + relu + 2x2 maxpool."""
+    y = lax.conv_general_dilated(x, w, (stride, stride), "SAME")
+    y = jnp.maximum(y, 0.0)
+    return lax.reduce_window(y, -jnp.inf, lax.max, (1, 1, 2, 2),
+                             (1, 1, 2, 2), "VALID")
+
+
+@jax.jit
+def k_dense_embed(x, w, _out):
+    flat = x.reshape((x.shape[0], -1))
+    return jnp.tanh(flat @ w)
+
+
+@jax.jit
+def k_concat_dense(e1, e2, w, _out):
+    h = jnp.concatenate([e1, e2], axis=1) @ w
+    return 1.0 / (1.0 + jnp.exp(-h))

@@ -1,0 +1,125 @@
+"""Fault-tolerant checkpointing.
+
+* atomic: writes into ``step_XXXX.tmp`` then ``os.rename`` — a crash
+  mid-save never corrupts the latest checkpoint;
+* asynchronous: device→host snapshot happens synchronously (cheap, and
+  consistent), file I/O runs on a background thread off the training
+  critical path (the GrJAX scheduler treats it as a host element);
+* sharded-ready: each process writes only its addressable shard data
+  (single-process here, but the layout is per-leaf files keyed by tree
+  path, which is what a multi-host writer needs);
+* bounded: keeps the newest ``keep`` checkpoints.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        elif hasattr(k, "name"):
+            parts.append(str(k.name))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3,
+                 async_save: bool = True) -> None:
+        self.dir = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, state: Any) -> None:
+        # 1. consistent host snapshot (D2H) — synchronous
+        leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(state)
+        snapshot = [(_path_str(p), np.asarray(v)) for p, v in leaves_with_paths]
+        self.wait()                          # one in-flight save at a time
+
+        def write():
+            tmp = os.path.join(self.dir, f"step_{step}.tmp")
+            final = os.path.join(self.dir, f"step_{step}")
+            shutil.rmtree(tmp, ignore_errors=True)
+            os.makedirs(tmp)
+            manifest = {}
+            for name, arr in snapshot:
+                fn = name.replace("/", "__") + ".npy"
+                np.save(os.path.join(tmp, fn), arr)
+                manifest[name] = {"file": fn, "dtype": str(arr.dtype),
+                                  "shape": list(arr.shape)}
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump({"step": step, "leaves": manifest}, f)
+            shutil.rmtree(final, ignore_errors=True)
+            os.rename(tmp, final)            # atomic publish
+            self._gc()
+
+        if self.async_save:
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+        else:
+            write()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    # ------------------------------------------------------------------
+    def latest_step(self) -> Optional[int]:
+        steps = []
+        for d in os.listdir(self.dir):
+            m = _STEP_RE.match(d)
+            if m and os.path.exists(os.path.join(self.dir, d, "manifest.json")):
+                steps.append(int(m.group(1)))
+        return max(steps) if steps else None
+
+    def restore(self, like: Any, step: Optional[int] = None) -> Any:
+        """Restore into the structure (and shardings) of ``like``."""
+        self.wait()
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        d = os.path.join(self.dir, f"step_{step}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)["leaves"]
+
+        leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+        out = []
+        for path, ref in leaves_with_paths:
+            name = _path_str(path)
+            arr = np.load(os.path.join(d, manifest[name]["file"]))
+            val = jax.device_put(arr, getattr(ref, "sharding", None)) \
+                if hasattr(ref, "sharding") else arr
+            out.append(val)
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def _gc(self) -> None:
+        steps = []
+        for d in os.listdir(self.dir):
+            m = _STEP_RE.match(d)
+            if m:
+                steps.append(int(m.group(1)))
+        steps.sort()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s}"),
+                          ignore_errors=True)

@@ -1,0 +1,20 @@
+"""GrJAX core: the paper's runtime DAG scheduler (see DESIGN.md §1-2)."""
+from .element import (AccessMode, Arg, ComputationalElement, ElementKind,
+                      const, inout, kernel, out)
+from .dag import ComputationDAG
+from .streams import NewStreamPolicy, ParentStreamPolicy, StreamManager
+from .managed import ManagedArray
+from .timeline import Timeline, Span
+from .history import KernelHistory
+from .executor import (Executor, SimExecutor, SimHardware,
+                       ThreadLaneExecutor)
+from .scheduler import GrScheduler, make_scheduler
+
+__all__ = [
+    "AccessMode", "Arg", "ComputationalElement", "ElementKind",
+    "const", "inout", "kernel", "out",
+    "ComputationDAG", "NewStreamPolicy", "ParentStreamPolicy", "StreamManager",
+    "ManagedArray", "Timeline", "Span", "KernelHistory",
+    "Executor", "SimExecutor", "SimHardware", "ThreadLaneExecutor",
+    "GrScheduler", "make_scheduler",
+]

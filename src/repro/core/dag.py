@@ -1,0 +1,148 @@
+"""Incremental computation DAG + dependency sets (paper §IV-A, Fig. 3).
+
+The DAG is built **at run time**: elements are appended as the host program
+issues them, and only the *frontier* of active computations is consulted.
+Dependency inference follows the paper's rules exactly:
+
+* each element starts with a dependency set containing all its arguments;
+* a **reader** (``const`` argument) depends on the *last writer* of that
+  argument only — it never depends on other readers, and it does **not**
+  consume the writer's dependency-set entry (Fig. 3 case C: "the dependency
+  set of the parent kernel K1 is not updated");
+* a **writer** depends on *all readers since the last write* (write-after-read
+  anti-dependencies, Fig. 3 case B) — transitively covering the previous
+  writer — or, if there are no readers, on the last writer directly
+  (write-after-write).  The write *consumes* the entry: the argument is
+  removed from the dependency sets of the previous writer and all readers
+  ("all dependency sets will be updated");
+* an element whose dependency set is empty can no longer introduce
+  dependencies (§IV-B) and leaves the frontier;
+* elements also leave the frontier when the host observes their completion
+  (§IV-B: "active until the CPU requires their result or one of their
+  children").
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set
+
+from .element import AccessMode, ComputationalElement
+
+
+@dataclass
+class _ArrayState:
+    """Frontier bookkeeping for one managed array (keyed by handle id)."""
+
+    last_writer: Optional[ComputationalElement] = None
+    readers: List[ComputationalElement] = field(default_factory=list)
+
+    def live(self) -> bool:
+        return self.last_writer is not None or bool(self.readers)
+
+
+class ComputationDAG:
+    """Runtime-built dependency DAG over computational elements."""
+
+    def __init__(self) -> None:
+        self._state: Dict[int, _ArrayState] = {}
+        self.frontier: Set[ComputationalElement] = set()
+        self.num_elements = 0
+        self.num_edges = 0
+
+    # ------------------------------------------------------------------
+    def _eligible(self, e: Optional[ComputationalElement], key: int) -> bool:
+        """An element can be a parent only while it is active *and* the
+        argument is still in its dependency set."""
+        return e is not None and e.active and key in e.dep_set
+
+    def add(self, element: ComputationalElement) -> List[ComputationalElement]:
+        """Insert ``element``, inferring parents.  Returns the parent list."""
+        parents: List[ComputationalElement] = []
+        seen: Set[int] = set()
+
+        def add_parent(p: ComputationalElement) -> None:
+            if p.uid not in seen and p is not element:
+                seen.add(p.uid)
+                parents.append(p)
+
+        for key, mode in element.arg_modes():
+            st = self._state.get(key)
+            if st is None:
+                st = self._state[key] = _ArrayState()
+
+            if mode.writes:
+                # WAR: depend on every active reader since the last write;
+                # they transitively cover the last writer (Fig. 3 case B).
+                live_readers = [r for r in st.readers if self._eligible(r, key)]
+                if live_readers:
+                    for r in live_readers:
+                        add_parent(r)
+                elif self._eligible(st.last_writer, key):
+                    add_parent(st.last_writer)  # WAW / RAW for inout
+                # The write consumes the dependency-set entries of the
+                # previous frontier for this argument.
+                if st.last_writer is not None:
+                    st.last_writer.dep_set.discard(key)
+                    self._maybe_retire(st.last_writer)
+                for r in st.readers:
+                    r.dep_set.discard(key)
+                    self._maybe_retire(r)
+                st.last_writer = element
+                st.readers = []
+            else:  # CONST read
+                if self._eligible(st.last_writer, key):
+                    add_parent(st.last_writer)  # RAW; writer's set NOT updated
+                st.readers.append(element)
+
+        element.parents = parents
+        for p in parents:
+            p.children.append(element)
+        self.num_edges += len(parents)
+        self.num_elements += 1
+        element.active = True
+        self.frontier.add(element)
+        self._maybe_retire(element)
+        return parents
+
+    # ------------------------------------------------------------------
+    def _maybe_retire(self, e: ComputationalElement) -> None:
+        """Drop an element from the frontier once its dependency set is empty
+        — it can no longer be a parent (§IV-B)."""
+        if e.active and not e.dep_set:
+            e.active = False
+            self.frontier.discard(e)
+
+    def retire(self, e: ComputationalElement) -> None:
+        """Host observed completion of ``e`` (and hence of its ancestors)."""
+        stack = [e]
+        while stack:
+            cur = stack.pop()
+            if not cur.active:
+                continue
+            cur.active = False
+            self.frontier.discard(cur)
+            stack.extend(cur.parents)
+
+    def retire_all(self) -> None:
+        for e in list(self.frontier):
+            e.active = False
+        self.frontier.clear()
+
+    # ------------------------------------------------------------------
+    def ancestors(self, e: ComputationalElement) -> Set[ComputationalElement]:
+        out: Set[ComputationalElement] = set()
+        stack = list(e.parents)
+        while stack:
+            cur = stack.pop()
+            if cur not in out:
+                out.add(cur)
+                stack.extend(cur.parents)
+        return out
+
+    def writers_of(self, key: int) -> Optional[ComputationalElement]:
+        st = self._state.get(key)
+        return st.last_writer if st else None
+
+    def readers_of(self, key: int) -> List[ComputationalElement]:
+        st = self._state.get(key)
+        return list(st.readers) if st else []

@@ -1,0 +1,152 @@
+"""Computational elements — the vertices of the runtime DAG (paper §IV-A).
+
+A *computational element* is anything the scheduler must order: a device
+kernel invocation, a host access to a managed array, a host-to-device
+transfer (prefetch), or a pre-registered library call.  Each element carries
+an explicit argument list; every argument is a handle to a `ManagedArray`
+(GrCUDA's UM-backed device array analogue) annotated with an access mode.
+
+The managed-object encapsulation is what makes automatic dependency
+inference sound: arguments are opaque handles, so there is no pointer
+aliasing (paper §IV-A, "removing the risk of pointer aliasing typical of
+native languages").
+"""
+from __future__ import annotations
+
+import enum
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional, Sequence, Tuple
+
+_ELEMENT_IDS = itertools.count()
+
+
+class AccessMode(enum.Enum):
+    """Argument annotations (paper §IV-D: ``input``/``const``/``output``).
+
+    ``CONST`` arguments are read-only and get the special dependency rules of
+    Fig. 3.  Un-annotated arguments are conservatively ``INOUT`` ("the
+    scheduler treats them as modifiable by the kernel; not specifying
+    arguments as read-only does not affect correctness").
+    """
+
+    CONST = "const"      # read-only
+    OUT = "out"          # write-only (still ordered after prior readers/writer)
+    INOUT = "inout"      # read-modify-write (default for unannotated args)
+
+    @property
+    def reads(self) -> bool:
+        return self in (AccessMode.CONST, AccessMode.INOUT)
+
+    @property
+    def writes(self) -> bool:
+        return self in (AccessMode.OUT, AccessMode.INOUT)
+
+
+@dataclass(frozen=True)
+class Arg:
+    """One argument of a computational element: a managed handle + mode."""
+
+    array: Any               # ManagedArray (duck-typed; must be hashable by id)
+    mode: AccessMode
+
+    @property
+    def key(self) -> int:
+        return id(self.array)
+
+
+class ElementKind(enum.Enum):
+    KERNEL = "kernel"            # device computation
+    HOST_ACCESS = "host_access"  # CPU read/write of a managed array (§IV-A)
+    TRANSFER = "transfer"        # H2D prefetch / D2H copy (scheduled by runtime)
+    LIBRARY = "library"          # pre-registered library call (§IV-A)
+    SYNC = "sync"                # explicit barrier requested by the host
+
+
+@dataclass
+class ComputationalElement:
+    """A vertex of the computation DAG.
+
+    Tracks its configuration, input arguments and whether the computation is
+    *active* (paper: "computations are considered active until the CPU
+    requires their result or one of their children" — plus the dependency-set
+    emptiness rule).
+    """
+
+    fn: Optional[Callable]
+    args: Tuple[Arg, ...]
+    kind: ElementKind = ElementKind.KERNEL
+    name: str = ""
+    # launch configuration (block-size analogue; used by history heuristics)
+    config: dict = field(default_factory=dict)
+    # estimated costs for the simulator (seconds / bytes); populated by the
+    # benchsuite or measured by the history tracker.
+    cost_s: float = 0.0
+    transfer_bytes: int = 0
+
+    # -- filled in by the scheduler --
+    uid: int = field(default_factory=lambda: next(_ELEMENT_IDS))
+    stream: Optional[int] = None       # lane id assigned by the StreamManager
+    parents: list = field(default_factory=list)    # list[ComputationalElement]
+    children: list = field(default_factory=list)
+    # dependency set: argument keys that can still introduce dependencies
+    dep_set: set = field(default_factory=set)
+    active: bool = False
+    done_event: Any = None             # executor-specific completion handle
+    # timeline bookkeeping (filled by executors)
+    t_start: float = float("nan")
+    t_end: float = float("nan")
+
+    def __post_init__(self) -> None:
+        if not self.name:
+            self.name = f"{self.kind.value}_{self.uid}"
+        # The dependency set initially contains all arguments (§IV-A).
+        self.dep_set = {a.key for a in self.args}
+
+    # ------------------------------------------------------------------
+    def arg_modes(self):
+        """Yield (key, mode) merged per distinct array.
+
+        If the same array appears twice with different modes the strongest
+        (writing) mode wins — matching the conservative GrCUDA behaviour.
+        """
+        merged: dict = {}
+        for a in self.args:
+            prev = merged.get(a.key)
+            if prev is None or (a.mode.writes and not prev.writes):
+                merged[a.key] = a.mode
+        return merged.items()
+
+    @property
+    def is_host(self) -> bool:
+        return self.kind in (ElementKind.HOST_ACCESS, ElementKind.SYNC)
+
+    def __hash__(self) -> int:
+        return self.uid
+
+    def __eq__(self, other) -> bool:
+        return isinstance(other, ComputationalElement) and other.uid == self.uid
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (f"<CE {self.name} uid={self.uid} stream={self.stream} "
+                f"parents={[p.name for p in self.parents]}>")
+
+
+def kernel(fn: Callable, *args: Arg, name: str = "", cost_s: float = 0.0,
+           transfer_bytes: int = 0, **config) -> ComputationalElement:
+    """Convenience constructor for a device kernel element."""
+    return ComputationalElement(fn=fn, args=tuple(args), kind=ElementKind.KERNEL,
+                                name=name, config=config, cost_s=cost_s,
+                                transfer_bytes=transfer_bytes)
+
+
+def const(array: Any) -> Arg:
+    return Arg(array, AccessMode.CONST)
+
+
+def out(array: Any) -> Arg:
+    return Arg(array, AccessMode.OUT)
+
+
+def inout(array: Any) -> Arg:
+    return Arg(array, AccessMode.INOUT)

@@ -1,0 +1,377 @@
+"""Executors: how lanes actually run computational elements.
+
+Two implementations behind one interface:
+
+* ``ThreadLaneExecutor`` — real execution.  Each lane is a worker thread with
+  an ordered queue (CUDA-stream semantics: in-order per lane, lanes
+  independent).  Cross-lane dependencies wait on per-element events — the
+  CUDA-event analogue; the host is never blocked by device work (§IV-B).
+  Kernels are (jitted) JAX callables; transfers are ``jax.device_put``.
+
+* ``SimExecutor`` — a discrete-event simulator that replays the *same* DAG +
+  lane assignment under a calibrated hardware model: processor-sharing
+  compute with a per-kernel *parallel fraction* (space-sharing contention,
+  Fig. 9), one copy engine per transfer direction with fair bandwidth
+  sharing, and host scheduling overhead.  This is how speedup numbers are
+  produced on a machine that is not an Nvidia GPU: the scheduling algorithm
+  is identical, only the clock is simulated.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from .element import ComputationalElement, ElementKind
+from .history import KernelHistory
+from .timeline import Timeline
+
+
+class Executor:
+    """Interface shared by real and simulated executors."""
+
+    timeline: Timeline
+    history: KernelHistory
+
+    def submit(self, element: ComputationalElement, lane_id: int,
+               wait_parents: List[ComputationalElement]) -> None:
+        raise NotImplementedError
+
+    def is_done(self, element: ComputationalElement) -> bool:
+        raise NotImplementedError
+
+    def wait(self, element: ComputationalElement) -> None:
+        raise NotImplementedError
+
+    def wait_all(self) -> None:
+        raise NotImplementedError
+
+    def host_overhead(self, seconds: float) -> None:
+        """Host-side scheduling cost (only the simulator advances a clock)."""
+
+    def host_now(self) -> float:
+        raise NotImplementedError
+
+    def record_host_span(self, element: ComputationalElement, t0: float,
+                         t1: float) -> None:
+        self.timeline.record(element.uid, element.name, "host", None, t0, t1)
+
+    def shutdown(self) -> None:
+        pass
+
+
+# ======================================================================
+# Real execution: threads as lanes, JAX async dispatch underneath
+# ======================================================================
+
+def _run_device_element(e: ComputationalElement):
+    """Execute a kernel/transfer element against its ManagedArray args."""
+    import jax
+
+    if e.kind is ElementKind.TRANSFER:
+        ma = e.args[0].array
+        val = jax.device_put(np.asarray(ma.host))
+        val.block_until_ready()
+        ma.set_physical_device(val)
+        return
+
+    inputs = [a.array.device_value() for a in e.args]
+    result = e.fn(*inputs)
+    writable = [a.array for a in e.args if a.mode.writes]
+    if writable:
+        outs = result if isinstance(result, (tuple, list)) else (result,)
+        if len(outs) != len(writable):
+            raise ValueError(
+                f"kernel {e.name}: returned {len(outs)} outputs for "
+                f"{len(writable)} writable args")
+        for ma, val in zip(writable, outs):
+            if hasattr(val, "block_until_ready"):
+                val.block_until_ready()
+            ma.set_physical_device(val)
+    elif result is not None and hasattr(result, "block_until_ready"):
+        result.block_until_ready()
+
+
+class _LaneWorker(threading.Thread):
+    def __init__(self, lane_id: int, executor: "ThreadLaneExecutor") -> None:
+        super().__init__(name=f"lane-{lane_id}", daemon=True)
+        self.lane_id = lane_id
+        self.executor = executor
+        self.q: "queue.Queue" = queue.Queue()
+        self.start()
+
+    def run(self) -> None:
+        while True:
+            item = self.q.get()
+            if item is None:
+                return
+            element, waits = item
+            try:
+                for p in waits:
+                    p.done_event.wait()
+                t0 = self.executor.host_now()
+                _run_device_element(element)
+                t1 = self.executor.host_now()
+                element.t_start, element.t_end = t0, t1
+                kind = ("h2d" if element.kind is ElementKind.TRANSFER
+                        else "compute")
+                self.executor.timeline.record(
+                    element.uid, element.name, kind, self.lane_id, t0, t1)
+                if element.kind is ElementKind.KERNEL:
+                    self.executor.history.record(
+                        element.name, element.config, t1 - t0)
+            except BaseException as exc:  # surfaced on wait()
+                element.error = exc
+            finally:
+                element.done_event.set()
+                self.q.task_done()
+
+
+class ThreadLaneExecutor(Executor):
+    def __init__(self) -> None:
+        self.timeline = Timeline()
+        self.history = KernelHistory()
+        self._lanes: Dict[int, _LaneWorker] = {}
+        self._submitted: List[ComputationalElement] = []
+        self._epoch = time.perf_counter()
+
+    def host_now(self) -> float:
+        return time.perf_counter() - self._epoch
+
+    def submit(self, element, lane_id, wait_parents) -> None:
+        element.done_event = threading.Event()
+        element.error = None
+        worker = self._lanes.get(lane_id)
+        if worker is None:
+            worker = self._lanes[lane_id] = _LaneWorker(lane_id, self)
+        self._submitted.append(element)
+        worker.q.put((element, list(wait_parents)))
+
+    def is_done(self, element) -> bool:
+        ev = element.done_event
+        return ev is not None and ev.is_set()
+
+    def wait(self, element) -> None:
+        if element.done_event is None:
+            return
+        element.done_event.wait()
+        if getattr(element, "error", None) is not None:
+            raise element.error
+
+    def wait_all(self) -> None:
+        for e in self._submitted:
+            self.wait(e)
+        self._submitted.clear()
+
+    def shutdown(self) -> None:
+        for w in self._lanes.values():
+            w.q.put(None)
+        self._lanes.clear()
+
+
+# ======================================================================
+# Discrete-event simulation
+# ======================================================================
+
+@dataclass
+class SimHardware:
+    """Cost model of the target device + host link.
+
+    * ``cost_s`` of a kernel is its *solo* execution time; a kernel's
+      ``parallel_fraction`` (pf) is the fraction of device resources it
+      occupies while running solo (SM occupancy / bandwidth analogue).
+    * Space-sharing: concurrent kernels water-fill the device's unit
+      capacity — a kernel receives allocation ``a ≤ pf`` and progresses at
+      rate ``a / pf`` (≤ 1).  Two pf=0.75 kernels therefore run at 0.67×
+      each — the ~70 %-of-contention-free-bound regime of Fig. 9 — while
+      low-occupancy kernels overlap for free (the ML benchmark's low-IPC
+      kernel, Fig. 12).
+    * Transfers: one copy engine per direction, FIFO order, full bandwidth —
+      CUDA DMA semantics (no fair-sharing of a single engine).
+
+    Defaults approximate the paper's PCIe-3.0 testbeds; the benchsuite
+    calibrates per-kernel costs, so only *relative* magnitudes matter for the
+    scheduling comparison.
+    """
+
+    h2d_gbps: float = 12.0          # effective PCIe 3.0 x16 H2D bandwidth
+    d2h_gbps: float = 12.0
+    default_parallel_fraction: float = 0.75
+    launch_overhead_s: float = 5e-6
+
+
+@dataclass
+class _SimTask:
+    element: ComputationalElement
+    kind: str                   # compute | h2d | d2h
+    work: float                 # seconds (compute) or bytes (transfer)
+    remaining: float
+    pf: float
+    lane: int
+    issue_t: float
+    rate: float = 0.0
+    t_start: float = float("nan")
+
+
+class SimExecutor(Executor):
+    """Event-driven replay of the scheduled DAG under `SimHardware`."""
+
+    def __init__(self, hw: Optional[SimHardware] = None) -> None:
+        self.hw = hw or SimHardware()
+        self.timeline = Timeline()
+        self.history = KernelHistory()
+        self.now = 0.0                    # device/simulation clock
+        self.host_time = 0.0              # host program clock
+        self._pending: List[_SimTask] = []
+        self._running: List[_SimTask] = []
+        self._end: Dict[int, float] = {}   # uid -> completion time
+        self._lane_q: Dict[int, List[int]] = {}   # lane -> uid queue (order)
+
+    # -- host clock ----------------------------------------------------
+    def host_now(self) -> float:
+        return self.host_time
+
+    def host_overhead(self, seconds: float) -> None:
+        self.host_time += seconds
+        self._advance_to(self.host_time)
+
+    # -- submission ------------------------------------------------------
+    def submit(self, element, lane_id, wait_parents) -> None:
+        if element.kind is ElementKind.TRANSFER:
+            kind = "h2d"
+            work = float(element.transfer_bytes)
+        else:
+            kind = "compute"
+            est = element.cost_s
+            if not est:
+                h = self.history.estimate(element.name, element.config)
+                est = h if h is not None else 1e-4
+            work = float(est)
+        pf = float(element.config.get(
+            "parallel_fraction", self.hw.default_parallel_fraction))
+        task = _SimTask(element=element, kind=kind, work=work, remaining=work,
+                        pf=pf, lane=lane_id, issue_t=self.host_time)
+        self._pending.append(task)
+        self._lane_q.setdefault(lane_id, []).append(element.uid)
+        self._try_start()
+
+    # -- readiness & rates ---------------------------------------------
+    def _parents_done(self, e: ComputationalElement) -> bool:
+        return all(p.uid in self._end and self._end[p.uid] <= self.now
+                   for p in e.parents)
+
+    def _lane_head(self, t: _SimTask) -> bool:
+        q = self._lane_q[t.lane]
+        return q and q[0] == t.element.uid
+
+    def _try_start(self) -> None:
+        started = True
+        while started:
+            started = False
+            for t in list(self._pending):
+                if (t.issue_t <= self.now + 1e-18 and self._lane_head(t)
+                        and self._parents_done(t.element)):
+                    self._pending.remove(t)
+                    t.t_start = self.now
+                    self._running.append(t)
+                    started = True
+        self._recompute_rates()
+
+    def _recompute_rates(self) -> None:
+        comp = [t for t in self._running if t.kind == "compute"]
+        # Water-fill device occupancy 1.0 across kernels; each kernel holds
+        # allocation a<=pf and progresses at a/pf (its solo rate is 1.0).
+        if comp:
+            remaining = 1.0
+            todo = sorted(comp, key=lambda t: t.pf)
+            n = len(todo)
+            for t in todo:
+                a = min(t.pf, remaining / n) if n else 0.0
+                t.rate = (a / t.pf) if t.pf > 0 else 1.0
+                remaining -= a
+                n -= 1
+        # One DMA engine per direction, FIFO at full bandwidth.
+        for direction, bw in (("h2d", self.hw.h2d_gbps),
+                              ("d2h", self.hw.d2h_gbps)):
+            xs = [t for t in self._running if t.kind == direction]
+            xs.sort(key=lambda t: (t.t_start, t.element.uid))
+            for i, t in enumerate(xs):
+                t.rate = bw * 1e9 if i == 0 else 0.0
+
+    # -- event loop ------------------------------------------------------
+    def _advance_to(self, target: float) -> None:
+        inf = float("inf")
+        guard = 0
+        while True:
+            guard += 1
+            if guard > 5_000_000:  # pragma: no cover
+                raise RuntimeError("simulation runaway")
+            self._try_start()
+            if not self._running:
+                # Nothing executing: jump to the next issue time (if any)
+                # or to the host target.
+                future = [t.issue_t for t in self._pending
+                          if t.issue_t > self.now + 1e-18]
+                if future and (target == inf or min(future) <= target):
+                    self.now = min(future)
+                    continue
+                if target != inf and self.now < target:
+                    self.now = target
+                    self._try_start()
+                    if self._running:
+                        continue
+                return
+            nxt = min(self.now + (t.remaining / t.rate if t.rate > 0 else inf)
+                      for t in self._running)
+            if nxt == inf:  # pragma: no cover
+                raise RuntimeError("simulation deadlock: zero-rate tasks")
+            step_to = nxt if target == inf else min(nxt, target)
+            dt = step_to - self.now
+            if dt > 0:
+                for t in self._running:
+                    t.remaining -= t.rate * dt
+                self.now = step_to
+            finished = [t for t in self._running
+                        if t.remaining <= max(1e-12, 1e-9 * t.work)]
+            for t in finished:
+                self._running.remove(t)
+                self._finish(t)
+            if not finished and target != inf and self.now >= target:
+                return
+            if not finished and dt <= 0:
+                return
+
+    def _finish(self, t: _SimTask) -> None:
+        e = t.element
+        self._end[e.uid] = self.now
+        e.t_start, e.t_end = t.t_start, self.now
+        self._lane_q[t.lane].remove(e.uid)
+        self.timeline.record(e.uid, e.name, t.kind, t.lane, t.t_start, self.now)
+        if t.kind == "compute":
+            self.history.record(e.name, e.config, self.now - t.t_start)
+        # Logical array-location bits are owned by the scheduler and were
+        # already flipped at schedule time; nothing to do here.
+
+    # -- waiting -----------------------------------------------------------
+    def is_done(self, element) -> bool:
+        return element.uid in self._end and self._end[element.uid] <= self.host_time
+
+    def wait(self, element) -> None:
+        if element.uid not in self._end:
+            self._advance_to(float("inf"))
+        if element.uid not in self._end:
+            raise RuntimeError(
+                f"simulation deadlock waiting for {element.name}; "
+                f"pending={[(t.element.name, t.lane) for t in self._pending]}")
+        self.host_time = max(self.host_time, self._end[element.uid])
+
+    def wait_all(self) -> None:
+        self._advance_to(float("inf"))
+        if self._pending or self._running:
+            raise RuntimeError("simulation finished with unrunnable tasks "
+                               f"{[t.element.name for t in self._pending]}")
+        self.host_time = max(self.host_time, self.now)

@@ -1,0 +1,127 @@
+"""ManagedArray — GrCUDA's UM-backed polyglot array, adapted to JAX.
+
+GrCUDA arrays live in CUDA Unified Memory: the host reads/writes them like
+normal arrays while the runtime tracks every access and orders it against GPU
+work (§IV-A).  TPUs have no page-fault UM, so GrJAX keeps an explicit
+host/device pair with validity bits and lets the scheduler insert
+*asynchronous prefetch* transfers (the paper's recommended mode — §V-C shows
+prefetching strictly dominates fault-driven migration).
+
+Host accesses go through ``read()`` / ``write()`` (or ``np.asarray(ma)`` /
+indexing), which notify the scheduler: accesses that introduce a data
+dependency on in-flight device work become HOST_ACCESS computational
+elements; accesses that cannot introduce dependencies are executed
+immediately without touching the DAG (§IV-A, low-overhead path).
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Any, Optional, Tuple
+
+import numpy as np
+
+_ARRAY_IDS = itertools.count()
+
+
+class ManagedArray:
+    """A host+device array pair managed by a GrScheduler."""
+
+    def __init__(self, scheduler: Any, host: Optional[np.ndarray] = None, *,
+                 shape: Optional[Tuple[int, ...]] = None, dtype=np.float32,
+                 name: str = "") -> None:
+        if host is None:
+            host = np.zeros(shape, dtype=dtype)
+        self._scheduler = scheduler
+        self.host: np.ndarray = np.asarray(host)
+        self.device: Any = None            # jax.Array once transferred
+        self.host_valid = True
+        self.device_valid = False
+        self.aid = next(_ARRAY_IDS)
+        self.name = name or f"arr{self.aid}"
+
+    # -- geometry ------------------------------------------------------
+    @property
+    def shape(self):
+        return self.host.shape
+
+    @property
+    def dtype(self):
+        return self.host.dtype
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.host.nbytes)
+
+    # -- device-side value used by executors ---------------------------
+    # NOTE on concurrency: ``host_valid``/``device_valid`` are *logical*
+    # location bits owned by the scheduling thread and flipped at SCHEDULE
+    # time (the scheduler knows what each scheduled element will produce).
+    # Worker threads only install the physical ``device`` value.  Reading
+    # stale flags from workers caused mis-scheduled prefetches otherwise.
+    def device_value(self):
+        if self.device is not None:
+            return self.device
+        return self.host
+
+    def set_physical_device(self, value) -> None:
+        """Called by executors when a kernel/transfer materializes a value."""
+        self.device = value
+
+    # -- host access API (triggers scheduling) --------------------------
+    def read(self) -> np.ndarray:
+        self._scheduler.host_read(self)
+        return self.host
+
+    def write(self, value) -> None:
+        self._scheduler.host_write(self)
+        self.host[...] = value
+        self.host_valid = True
+        self.device_valid = False
+
+    def __array__(self, dtype=None):
+        out = self.read()
+        return out.astype(dtype) if dtype is not None else out
+
+    def __getitem__(self, idx):
+        return self.read()[idx]
+
+    def __setitem__(self, idx, value):
+        self._scheduler.host_write(self)
+        self.host[idx] = value
+        self.host_valid = True
+        self.device_valid = False
+
+    def __repr__(self) -> str:  # pragma: no cover
+        loc = "D" if self.device_valid else "-"
+        loc += "H" if self.host_valid else "-"
+        return f"<ManagedArray {self.name} {self.shape} {self.dtype} [{loc}]>"
+
+
+class ManagedValue:
+    """Device-resident opaque value (e.g. a TrainState pytree) under the
+    scheduler's dependency tracking.  No host mirror: it is produced and
+    consumed by device kernels; ``get()`` synchronizes the owning lanes and
+    returns the pytree (used for checkpointing/metrics)."""
+
+    def __init__(self, scheduler: Any, value: Any = None, name: str = "") -> None:
+        self._scheduler = scheduler
+        self.device: Any = value
+        self.host = None
+        self.host_valid = False
+        self.device_valid = value is not None
+        self.aid = next(_ARRAY_IDS)
+        self.name = name or f"val{self.aid}"
+
+    @property
+    def nbytes(self) -> int:
+        return 0
+
+    def device_value(self):
+        return self.device
+
+    def set_physical_device(self, value) -> None:
+        self.device = value
+
+    def get(self):
+        self._scheduler._sync_against(self, writes=False)
+        return self.device

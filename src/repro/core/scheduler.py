@@ -1,0 +1,238 @@
+"""GrScheduler — the user-facing runtime (paper §IV-B, Fig. 5).
+
+The *GPU execution context* of the paper: tracks declarations/invocations of
+computational elements, updates the DAG with inferred dependencies, asks the
+stream manager for a lane, and submits to an executor.  Two policies:
+
+* ``serial``  — the original GrCUDA scheduler: synchronous, in-order, no
+  overlap, no dependency computation (baseline of Fig. 7);
+* ``parallel`` — this paper: asynchronous, dependency-driven, lanes + events,
+  automatic prefetch of host-resident arguments.
+
+Host reads/writes of managed arrays synchronize only against the in-flight
+computations that actually touch the data (§IV-B), then retire the observed
+sub-DAG from the frontier.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable, List, Optional, Sequence
+
+import numpy as np
+
+from .dag import ComputationDAG
+from .element import (AccessMode, Arg, ComputationalElement, ElementKind,
+                      const, inout, out)
+from .executor import Executor, SimExecutor, SimHardware, ThreadLaneExecutor
+from .managed import ManagedArray
+from .streams import NewStreamPolicy, ParentStreamPolicy, StreamManager
+from .timeline import Timeline
+
+
+class GrScheduler:
+    def __init__(self,
+                 policy: str = "parallel",
+                 executor: Optional[Executor] = None,
+                 new_stream_policy: NewStreamPolicy = NewStreamPolicy.FIFO_REUSE,
+                 parent_stream_policy: ParentStreamPolicy = ParentStreamPolicy.FIRST_CHILD_INHERITS,
+                 auto_prefetch: bool = True,
+                 launch_overhead_s: Optional[float] = None,
+                 max_lanes: Optional[int] = None) -> None:
+        assert policy in ("serial", "parallel")
+        self.policy = policy
+        self.executor = executor or ThreadLaneExecutor()
+        self.dag = ComputationDAG()
+        self.streams = StreamManager(new_stream_policy, parent_stream_policy,
+                                     max_lanes=max_lanes)
+        self.auto_prefetch = auto_prefetch
+        if launch_overhead_s is None:
+            launch_overhead_s = 5e-6 if policy == "parallel" else 1e-6
+        self.launch_overhead_s = launch_overhead_s
+        self._elements: List[ComputationalElement] = []
+        self._tune_counts: dict = {}
+
+    # ------------------------------------------------------------------
+    def array(self, data=None, *, shape=None, dtype=np.float32,
+              name: str = "") -> ManagedArray:
+        return ManagedArray(self, data, shape=shape, dtype=dtype, name=name)
+
+    # ------------------------------------------------------------------
+    def _mark_host_done(self, e: ComputationalElement) -> None:
+        if isinstance(self.executor, SimExecutor):
+            self.executor._end[e.uid] = self.executor.host_time
+        else:
+            ev = threading.Event()
+            ev.set()
+            e.done_event = ev
+        e.t_start = e.t_end = self.executor.host_now()
+
+    def _schedule(self, e: ComputationalElement) -> None:
+        """DAG insert + lane assignment + submission (parallel policy)."""
+        self.executor.host_overhead(self.launch_overhead_s)
+        self.dag.add(e)
+        lane, events = self.streams.assign(e, self.executor.is_done)
+        self.executor.submit(e, lane.lane_id, events)
+        self._elements.append(e)
+
+    def _prefetch_args(self, args: Sequence[Arg]) -> None:
+        """Insert asynchronous H2D transfers for host-resident read args."""
+        for a in args:
+            ma = a.array
+            if a.mode.reads and ma.host_valid and not ma.device_valid:
+                t = ComputationalElement(
+                    fn=None, args=(inout(ma),), kind=ElementKind.TRANSFER,
+                    name=f"h2d_{ma.name}", transfer_bytes=ma.nbytes)
+                if self.policy == "parallel":
+                    self._schedule(t)
+                else:
+                    self._run_serial(t)
+                # Logical location update at schedule time (see managed.py).
+                ma.device_valid = True
+
+    # ------------------------------------------------------------------
+    def launch(self, fn: Optional[Callable], args: Sequence[Arg], *,
+               name: str = "", cost_s: float = 0.0,
+               tune: Optional[dict] = None,
+               **config) -> ComputationalElement:
+        """Issue one kernel. Dependencies & lane are inferred automatically.
+
+        ``tune={"param": [candidates...]}`` enables the paper's §VI
+        heuristic: explore each candidate launch config round-robin, then
+        exploit the historically fastest (per-kernel history, §IV-A).  The
+        chosen values are merged into ``config`` and passed to ``fn`` as
+        keyword arguments when it accepts them.
+        """
+        if tune:
+            config = dict(config, **self._tune(name, tune))
+        if self.auto_prefetch:
+            self._prefetch_args(args)
+        e = ComputationalElement(fn=fn, args=tuple(args),
+                                 kind=ElementKind.KERNEL, name=name,
+                                 config=config, cost_s=cost_s)
+        if self.policy == "parallel":
+            self._schedule(e)
+        else:
+            self._run_serial(e)
+        # Logical location update at schedule time: the kernel's writable
+        # outputs will live on device; host copies become stale.
+        for a in e.args:
+            if a.mode.writes:
+                a.array.device_valid = True
+                a.array.host_valid = False
+        return e
+
+    def _tune(self, name: str, tune: dict) -> dict:
+        counts = self._tune_counts.setdefault(name, 0)
+        keys = sorted(tune)
+        grid = [dict(zip(keys, vals)) for vals in
+                __import__("itertools").product(*(tune[k] for k in keys))]
+        if counts < 2 * len(grid):      # exploration phase
+            choice = grid[counts % len(grid)]
+        else:                           # exploitation: fastest median config
+            best = self.executor.history.best_config(name)
+            choice = ({k: type(grid[0][k])(v) for k, v in best.items()
+                       if k in keys} if best else grid[0])
+        self._tune_counts[name] = counts + 1
+        return choice
+
+    def _run_serial(self, e: ComputationalElement) -> None:
+        """Original GrCUDA behaviour: blocking, in-order, single lane, no
+        dependency computation (overheads even smaller, §V-C)."""
+        self.executor.host_overhead(self.launch_overhead_s)
+        e.parents = []
+        self.executor.submit(e, 0, [])
+        self.executor.wait(e)
+        self._elements.append(e)
+
+    # ------------------------------------------------------------------
+    # Host accesses (ManagedArray callbacks) — paper §IV-A/B
+    # ------------------------------------------------------------------
+    def _sync_against(self, ma: ManagedArray, writes: bool) -> None:
+        key = id(ma)
+        st = self.dag._state.get(key)
+        if st is None:
+            return
+        deps: List[ComputationalElement] = []
+        if writes:
+            deps = [r for r in st.readers if r.active and key in r.dep_set]
+            if not deps and st.last_writer is not None and st.last_writer.active:
+                deps = [st.last_writer]
+        else:
+            if st.last_writer is not None and st.last_writer.active:
+                deps = [st.last_writer]
+        deps = [d for d in deps if not d.is_host]
+        if not deps:
+            return  # fast path: host access introduces no dependency (§IV-A)
+        e = ComputationalElement(
+            fn=None, args=(inout(ma) if writes else const(ma),),
+            kind=ElementKind.HOST_ACCESS, name=f"host_{ma.name}")
+        self.dag.add(e)
+        t0 = self.executor.host_now()
+        for p in e.parents:
+            if not p.is_host:
+                self.executor.wait(p)   # sync only the lanes owning this data
+        self.dag.retire(e)
+        for p in e.parents:
+            self.streams.release(p)
+        self._mark_host_done(e)
+        self.executor.record_host_span(e, t0, self.executor.host_now())
+
+    def host_read(self, ma: ManagedArray) -> None:
+        self._sync_against(ma, writes=False)
+        if ma.device_valid and not ma.host_valid:
+            self._d2h(ma)
+
+    def host_write(self, ma: ManagedArray) -> None:
+        self._sync_against(ma, writes=True)
+        if ma.device_valid and not ma.host_valid:
+            self._d2h(ma)  # read-modify-write safety for partial updates
+
+    def _d2h(self, ma: ManagedArray) -> None:
+        ex = self.executor
+        if isinstance(ex, SimExecutor):
+            t0 = ex.host_time
+            ex.host_time += ma.nbytes / (ex.hw.d2h_gbps * 1e9)
+            ex._advance_to(ex.host_time)
+            ex.timeline.record(-1, f"d2h_{ma.name}", "d2h", None, t0, ex.host_time)
+        else:
+            t0 = ex.host_now()
+            ma.host = np.asarray(ma.device)
+            ex.timeline.record(-1, f"d2h_{ma.name}", "d2h", None, t0, ex.host_now())
+        ma.host_valid = True
+
+    # ------------------------------------------------------------------
+    def sync(self) -> None:
+        """Full barrier: host waits for every in-flight computation."""
+        self.executor.wait_all()
+        self.dag.retire_all()
+        for e in self._elements:
+            self.streams.release(e)
+
+    @property
+    def timeline(self) -> Timeline:
+        return self.executor.timeline
+
+    def stats(self) -> dict:
+        return {"policy": self.policy,
+                "elements": self.dag.num_elements,
+                "edges": self.dag.num_edges,
+                **self.streams.stats(),
+                **self.executor.history.stats()}
+
+    def shutdown(self) -> None:
+        self.executor.shutdown()
+
+
+# ----------------------------------------------------------------------
+def make_scheduler(policy: str = "parallel", *, simulate: bool = False,
+                   hw: Optional[SimHardware] = None,
+                   oracle: bool = False, **kw) -> GrScheduler:
+    """Factory: real vs simulated executor; ``oracle=True`` emulates the
+    hand-optimized CUDA-Graphs baseline of §V-D (full DAG known in advance →
+    zero runtime scheduling overhead, unlimited dedicated streams)."""
+    ex = SimExecutor(hw) if simulate else ThreadLaneExecutor()
+    if oracle:
+        kw.setdefault("new_stream_policy", NewStreamPolicy.ALWAYS_NEW)
+        kw.setdefault("launch_overhead_s", 0.0)
+    return GrScheduler(policy=policy, executor=ex, **kw)

@@ -1,0 +1,158 @@
+"""Stream (execution-lane) management (paper §IV-C).
+
+CUDA streams map to GrJAX *lanes*: ordered dispatch queues that serialize the
+elements assigned to them while different lanes proceed independently.  On a
+real TPU deployment a lane is a per-device async dispatch queue or a submesh
+(see DESIGN.md §2); the assignment algorithm below is the paper's, verbatim:
+
+* lanes are reused in FIFO order; a new lane is created **only** when no
+  currently-empty lane exists;
+* the **first child** of a computation is scheduled on its parent's lane
+  (sequential lane order makes the dependency free — no event needed);
+  **following children** are scheduled on other lanes to guarantee
+  concurrency, synchronizing with an event;
+* the manager tracks which computations are in flight on each lane and which
+  managed arrays each lane currently *owns*, so a host access synchronizes
+  only the lanes operating on that data (§IV-B).
+"""
+from __future__ import annotations
+
+import enum
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Set, Tuple
+
+from .element import ComputationalElement
+
+
+class NewStreamPolicy(enum.Enum):
+    """How to obtain a lane when none can be inherited from a parent."""
+
+    FIFO_REUSE = "fifo"          # reuse an empty lane in FIFO order (default)
+    ALWAYS_NEW = "always-new"    # create a fresh lane every time
+
+
+class ParentStreamPolicy(enum.Enum):
+    """How children relate to their parents' lanes."""
+
+    FIRST_CHILD_INHERITS = "disjoint"      # paper default (§IV-C)
+    SAME_AS_PARENT = "same-as-parent"      # all children share parent's lane
+
+
+@dataclass
+class Lane:
+    lane_id: int
+    in_flight: List[ComputationalElement] = field(default_factory=list)
+    last: Optional[ComputationalElement] = None   # tail of the lane's queue
+
+    def pending(self, is_done: Callable[[ComputationalElement], bool]) -> int:
+        self.in_flight = [e for e in self.in_flight if not is_done(e)]
+        return len(self.in_flight)
+
+
+class StreamManager:
+    """Assigns computational elements to lanes and decides event insertion."""
+
+    def __init__(self,
+                 new_stream_policy: NewStreamPolicy = NewStreamPolicy.FIFO_REUSE,
+                 parent_stream_policy: ParentStreamPolicy = ParentStreamPolicy.FIRST_CHILD_INHERITS,
+                 max_lanes: Optional[int] = None) -> None:
+        self.new_stream_policy = new_stream_policy
+        self.parent_stream_policy = parent_stream_policy
+        self.max_lanes = max_lanes
+        self.lanes: Dict[int, Lane] = {}
+        self._free: deque = deque()          # FIFO of idle lane ids
+        self.lanes_created = 0
+        self.events_created = 0
+
+    # ------------------------------------------------------------------
+    def _new_lane(self) -> Lane:
+        lane = Lane(self.lanes_created)
+        self.lanes[lane.lane_id] = lane
+        self.lanes_created += 1
+        return lane
+
+    def _acquire_free_lane(self, is_done) -> Lane:
+        if self.new_stream_policy is NewStreamPolicy.FIFO_REUSE:
+            # Reclaim lanes whose queues drained (FIFO order, §IV-C).
+            for _ in range(len(self._free)):
+                lane_id = self._free.popleft()
+                lane = self.lanes[lane_id]
+                if lane.pending(is_done) == 0:
+                    return lane
+                self._free.append(lane_id)
+            # Lazily scan for drained lanes not yet returned to the pool.
+            for lane in self.lanes.values():
+                if lane.pending(is_done) == 0 and lane.lane_id not in self._free:
+                    return lane
+        if self.max_lanes is not None and len(self.lanes) >= self.max_lanes:
+            # Saturated: fall back to the least-loaded lane.
+            return min(self.lanes.values(), key=lambda l: l.pending(is_done))
+        return self._new_lane()
+
+    # ------------------------------------------------------------------
+    def assign(self, element: ComputationalElement,
+               is_done: Callable[[ComputationalElement], bool]
+               ) -> Tuple[Lane, List[ComputationalElement]]:
+        """Pick a lane for ``element``; return (lane, parents needing events).
+
+        A parent needs no event when it is the lane's current tail (lane
+        order guarantees completion) — the "first child inherits" rule; every
+        other *unfinished* parent contributes one synchronization event.
+        """
+        parents = element.parents
+        lane: Optional[Lane] = None
+
+        if parents and self.parent_stream_policy is ParentStreamPolicy.SAME_AS_PARENT:
+            lane = self.lanes[parents[0].stream]
+        elif parents:
+            # First child inherits: find a parent that (a) sits at the tail of
+            # its lane and (b) has no scheduled child yet on that lane.
+            for p in sorted(parents, key=lambda q: -q.cost_s):
+                if p.stream is None:
+                    continue
+                plane = self.lanes[p.stream]
+                if plane.last is p and not is_done(p):
+                    lane = plane
+                    break
+
+        if lane is None:
+            lane = self._acquire_free_lane(is_done)
+
+        element.stream = lane.lane_id
+        lane.in_flight.append(element)
+        inherited_tail = lane.last
+        lane.last = element
+
+        # Events: every unfinished parent on a *different* lane, plus parents
+        # on this lane that are not the immediate tail (queue order already
+        # covers the tail and everything before it).
+        events = []
+        for p in parents:
+            if is_done(p):
+                continue
+            if p.stream == lane.lane_id and (p is inherited_tail or self._precedes(lane, p)):
+                continue  # ordered by the lane queue
+            events.append(p)
+        self.events_created += len(events)
+        return lane, events
+
+    @staticmethod
+    def _precedes(lane: Lane, p: ComputationalElement) -> bool:
+        # p scheduled earlier on the same lane => ordered without an event.
+        return p.stream == lane.lane_id
+
+    # ------------------------------------------------------------------
+    def release(self, element: ComputationalElement) -> None:
+        """Called when the host has synchronized with ``element``."""
+        lane = self.lanes.get(element.stream) if element.stream is not None else None
+        if lane is None:
+            return
+        if element in lane.in_flight:
+            lane.in_flight.remove(element)
+        if not lane.in_flight and lane.lane_id not in self._free:
+            self._free.append(lane.lane_id)
+
+    def stats(self) -> dict:
+        return {"lanes_created": self.lanes_created,
+                "events_created": self.events_created}

@@ -1,0 +1,130 @@
+"""Blocked causal flash attention as a Pallas TPU kernel.
+
+TPU-native design (HARDWARE ADAPTATION, DESIGN.md §2):
+* HBM→VMEM tiling via BlockSpec: one (block_q x hd) query tile and one
+  (block_k x hd) key/value tile resident per grid step; the score block
+  (block_q x block_k) lives only in VMEM/VREGs — it never round-trips HBM
+  (the XLA fallback in models/attention.py pays that traffic).
+* Online-softmax state (m, l, acc) in VMEM scratch, persisting across the
+  sequential minor grid dimension (k blocks) — the TPU's in-order grid
+  replaces the CUDA thread-block reduction of the GPU original.
+* Default blocks 256x256: multiples of the 128-wide MXU systolic array and
+  the (8,128) VREG tile.
+* GQA via the index map: query head h reads kv head h // group.
+
+Validated against ref.py in interpret mode (tests/test_kernels.py sweeps
+shapes/dtypes/window/softcap).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, block_q: int, block_k: int, causal: bool,
+                  window: int, softcap: float, n_k_blocks: int):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                     # (bq, hd)
+    k = k_ref[0].astype(jnp.float32)                     # (bk, hd)
+    s = jax.lax.dot_general(q * scale, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    if softcap > 0:
+        s = jnp.tanh(s / softcap) * softcap
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_k), 0)
+    k_pos = kj * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_k), 1)
+    if causal:
+        mask = k_pos <= q_pos
+        if window > 0:
+            mask &= (q_pos - k_pos) < window
+        s = jnp.where(mask, s, NEG_INF)
+    elif window > 0:
+        s = jnp.where((q_pos - k_pos) < window, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
+    v = v_ref[0].astype(jnp.float32)
+    pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + pv
+    m_ref[...] = m_new
+
+    @pl.when(kj == n_k_blocks - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "block_q", "block_k",
+                     "interpret", "num_q_heads"))
+def flash_attention_bhsd(q, k, v, *, causal: bool = True, window: int = 0,
+                         softcap: float = 0.0, block_q: int = 256,
+                         block_k: int = 256, interpret: bool = False,
+                         num_q_heads: int = 0):
+    """q: (B*H, Sq, hd); k/v: (B*Hkv, Sk, hd) flattened batch*head layout.
+    ``num_q_heads`` (=H) is required when H != Hkv (GQA head mapping)."""
+    BH, Sq, hd = q.shape
+    BHkv, Sk, _ = k.shape
+    if not num_q_heads:
+        raise ValueError("num_q_heads is required (GQA head mapping)")
+    H = num_q_heads
+    B = BH // H
+    Hkv = BHkv // B
+    g = H // Hkv
+
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    while Sq % block_q:
+        block_q //= 2
+    while Sk % block_k:
+        block_k //= 2
+    nq, nk = Sq // block_q, Sk // block_k
+
+    def kv_index(bh, i, j):
+        b = bh // H
+        h = bh % H
+        return (b * Hkv + h // g, j, 0)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=hd ** -0.5, block_q=block_q, block_k=block_k,
+        causal=causal, window=window, softcap=softcap, n_k_blocks=nk)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda bh, i, j: (bh, i, 0)),
+            pl.BlockSpec((1, block_k, hd), kv_index),
+            pl.BlockSpec((1, block_k, hd), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda bh, i, j: (bh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,18 @@
+"""jit'd wrapper: any leading shape, interpret fallback off-TPU."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import rmsnorm_2d
+
+
+@functools.partial(jax.jit, static_argnames=("eps",))
+def rmsnorm(x, scale, *, eps: float = 1e-6):
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    y = rmsnorm_2d(x2, scale, eps=eps,
+                   interpret=jax.default_backend() != "tpu")
+    return y.reshape(shape)

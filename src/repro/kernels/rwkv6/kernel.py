@@ -1,0 +1,76 @@
+"""RWKV6 WKV recurrence as a Pallas TPU kernel.
+
+The GPU reference (RWKV's CUDA wkv6 kernel) assigns one thread per channel
+with shared-memory staging of r/k/v/w — a warp-level pattern with no direct
+TPU analogue.  The TPU-native re-think (DESIGN.md §2): one grid row per
+(batch x head), the per-head state S (hd x hd, fp32) lives in VMEM scratch
+and persists across the sequential time-chunk grid dimension; each grid step
+streams a (chunk x hd) tile of r/k/v/w from HBM and walks it with a
+``fori_loop`` of rank-1 updates (outer products on the VPU/MXU).
+
+State is carried in/out explicitly so decode and chunked prefill compose.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, o_ref, sT_ref,
+                state_ref, *, chunk: int, n_chunks: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _load_state():
+        state_ref[...] = s0_ref[0]
+
+    u = u_ref[0].astype(jnp.float32)                    # (hd,)
+
+    def step(t, _):
+        r = r_ref[0, t].astype(jnp.float32)             # (hd,)
+        k = k_ref[0, t].astype(jnp.float32)
+        v = v_ref[0, t].astype(jnp.float32)
+        w = w_ref[0, t].astype(jnp.float32)
+        S = state_ref[...]                              # (hd, hd) fp32
+        kv = k[:, None] * v[None, :]
+        y = jnp.sum(r[:, None] * (S + u[:, None] * kv), axis=0)
+        state_ref[...] = w[:, None] * S + kv
+        o_ref[0, t] = y.astype(o_ref.dtype)
+        return 0
+
+    jax.lax.fori_loop(0, chunk, step, 0)
+
+    @pl.when(ci == n_chunks - 1)
+    def _store_state():
+        sT_ref[0] = state_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6_bh(r, k, v, w, u, s0, *, chunk: int = 128, interpret: bool = False):
+    """r/k/v/w: (BH, T, hd); u: (BH, hd); s0: (BH, hd, hd) fp32.
+    Returns (y (BH, T, hd) in r.dtype, s_final (BH, hd, hd) fp32)."""
+    BH, T, hd = r.shape
+    chunk = min(chunk, T)
+    while T % chunk:
+        chunk //= 2
+    n_chunks = T // chunk
+
+    kernel = functools.partial(_wkv_kernel, chunk=chunk, n_chunks=n_chunks)
+    seq_spec = pl.BlockSpec((1, chunk, hd), lambda bh, ci: (bh, ci, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, n_chunks),
+        in_specs=[seq_spec, seq_spec, seq_spec, seq_spec,
+                  pl.BlockSpec((1, hd), lambda bh, ci: (bh, 0)),
+                  pl.BlockSpec((1, hd, hd), lambda bh, ci: (bh, 0, 0))],
+        out_specs=[seq_spec,
+                   pl.BlockSpec((1, hd, hd), lambda bh, ci: (bh, 0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((BH, T, hd), r.dtype),
+                   jax.ShapeDtypeStruct((BH, hd, hd), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u, s0)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the WKV6 recurrence (scan form)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r, k, v, w, u, s0):
+    """r/k/v/w: (BH, T, hd); u: (BH, hd); s0: (BH, hd, hd) fp32."""
+    rf = r.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    wf = w.astype(jnp.float32)
+    uf = u.astype(jnp.float32)
+
+    def step(S, xs):
+        r_t, k_t, v_t, w_t = xs                       # (BH, hd) each
+        kv = k_t[:, :, None] * v_t[:, None, :]
+        y = jnp.einsum("bi,bij->bj", r_t, S + uf[:, :, None] * kv)
+        S = w_t[:, :, None] * S + kv
+        return S, y
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (rf, kf, vf, wf))
+    S_final, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(r.dtype), S_final

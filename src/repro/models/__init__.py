@@ -1,0 +1,8 @@
+"""Model zoo: unified transformer/SSM/MoE/hybrid stack (DESIGN.md §4)."""
+from .config import ArchConfig, MoEConfig, SSMConfig, SHAPES, ShapeCell
+from .transformer import (cross_entropy_loss, forward_decode, forward_prefill,
+                          forward_train, init_cache, init_lm, layer_kinds)
+
+__all__ = ["ArchConfig", "MoEConfig", "SSMConfig", "SHAPES", "ShapeCell",
+           "init_lm", "init_cache", "forward_train", "forward_prefill",
+           "forward_decode", "cross_entropy_loss", "layer_kinds"]

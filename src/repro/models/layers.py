@@ -1,0 +1,87 @@
+"""Shared neural layers: norms, rotary embeddings, MLP variants, inits."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..sharding.context import use_weight
+
+
+def normal_init(key, shape, scale: float = 0.02, dtype=jnp.float32):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ----------------------------------------------------------------- norms
+def init_norm(cfg, d: int, dtype=jnp.float32):
+    p = {"scale": jnp.ones((d,), dtype)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def apply_norm(cfg, p, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rms_norm_heads(x, scale, eps: float = 1e-6):
+    """qk-norm: RMSNorm over the head dimension (qwen3)."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ------------------------------------------------------------------ rope
+def rope_angles(positions, head_dim: int, theta: float):
+    """positions: (...,) int -> cos/sin of shape (..., head_dim//2)."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) * 2.0 / head_dim))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (..., S, H, hd); cos/sin: (..., S, hd//2) broadcast over heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :].astype(x.dtype)
+    s = sin[..., None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+# ------------------------------------------------------------------- mlp
+def init_mlp(key, cfg, d: int, d_ff: int, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    gated = cfg.mlp in ("swiglu", "geglu")
+    p = {"w_in": normal_init(ks[0], (d, d_ff), dtype=dtype),
+         "w_out": normal_init(ks[1], (d_ff, d), scale=0.02 / np.sqrt(2 * cfg.n_layers),
+                              dtype=dtype)}
+    if gated:
+        p["w_gate"] = normal_init(ks[2], (d, d_ff), dtype=dtype)
+    return p
+
+
+def apply_mlp(cfg, p, x):
+    h = x @ use_weight(p["w_in"].astype(x.dtype), (None, "model"))
+    if cfg.mlp == "swiglu":
+        g = x @ use_weight(p["w_gate"].astype(x.dtype), (None, "model"))
+        h = jax.nn.silu(g) * h
+    elif cfg.mlp == "geglu":
+        g = x @ use_weight(p["w_gate"].astype(x.dtype), (None, "model"))
+        h = jax.nn.gelu(g, approximate=True) * h
+    elif cfg.mlp == "relu2":                       # nemotron squared-ReLU
+        h = jnp.square(jax.nn.relu(h))
+    else:                                          # gelu (starcoder2)
+        h = jax.nn.gelu(h, approximate=True)
+    return h @ use_weight(p["w_out"].astype(x.dtype), ("model", None))

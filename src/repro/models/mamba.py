@@ -1,0 +1,140 @@
+"""Mamba-style selective SSM head for the Hymba hybrid blocks
+(arXiv:2411.13676: parallel attention + SSM heads, ssm_state=16).
+
+Diagonal selective scan (S6): per channel c and state n
+    h_t = exp(-Δ_t A) ⊙ h_{t-1} + Δ_t B_t u_t
+    y_t = C_t · h_t + D u_t
+with Δ, B, C input-dependent.  Sequence mode uses an associative scan over
+time (log-depth, TPU-friendly); decode mode is an O(1) state update.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding.context import use_weight
+from .layers import normal_init
+
+
+def init_mamba(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    s = cfg.ssm
+    inner = s.expand * d
+    ks = jax.random.split(key, 7)
+    return {
+        "w_in": normal_init(ks[0], (d, 2 * inner), dtype=dtype),   # u, z
+        "w_dt": normal_init(ks[1], (inner, 1), scale=0.1, dtype=dtype),
+        "dt_bias": jnp.zeros((inner,), dtype),
+        "w_B": normal_init(ks[2], (inner, s.state_dim), dtype=dtype),
+        "w_C": normal_init(ks[3], (inner, s.state_dim), dtype=dtype),
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, s.state_dim + 1,
+                                             dtype=jnp.float32)[None, :],
+                                  (inner, 1))).astype(dtype),
+        "D": jnp.ones((inner,), dtype),
+        "conv_w": normal_init(ks[4], (s.conv_dim, inner), scale=0.2,
+                              dtype=dtype),
+        "w_out": normal_init(ks[5], (inner, d), dtype=dtype),
+    }
+
+
+def init_mamba_state(cfg, batch: int, dtype=jnp.float32):
+    s = cfg.ssm
+    inner = s.expand * cfg.d_model
+    return {"h": jnp.zeros((batch, inner, s.state_dim), jnp.float32),
+            "conv": jnp.zeros((batch, s.conv_dim - 1, inner), dtype)}
+
+
+def _features(cfg, p, u_conv):
+    """Input-dependent SSM parameters from the conv'd activation."""
+    dt = jax.nn.softplus(u_conv * p["w_dt"].astype(u_conv.dtype)[:, 0]
+                         + p["dt_bias"].astype(u_conv.dtype))
+    B = u_conv @ p["w_B"].astype(u_conv.dtype)
+    C = u_conv @ p["w_C"].astype(u_conv.dtype)
+    return dt, B, C
+
+
+def _causal_conv_seq(p, u, conv_state):
+    """Depthwise causal conv over time. u: (B,S,inner)."""
+    k = p["conv_w"].shape[0]
+    pad = jnp.concatenate([conv_state.astype(u.dtype), u], axis=1)        # (B, S+k-1, inner)
+    out = jnp.zeros_like(u)
+    cw = p["conv_w"].astype(u.dtype)
+    for i in range(k):
+        out = out + pad[:, i:i + u.shape[1], :] * cw[i][None, None, :]
+    return jax.nn.silu(out), pad[:, -(k - 1):, :]
+
+
+def apply_mamba_seq(cfg, p, x, state) -> Tuple[jnp.ndarray, dict]:
+    """x: (B, S, d). Associative scan over time in fp32."""
+    B, S, d = x.shape
+    s = cfg.ssm
+    inner = s.expand * d
+    uz = x @ use_weight(p["w_in"].astype(x.dtype), (None, "model"))
+    u, z = uz[..., :inner], uz[..., inner:]
+    u, conv_state = _causal_conv_seq(p, u, state["conv"])
+    dt, Bm, Cm = _features(cfg, p, u)
+
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                    # (inner,N)
+    dt32 = dt.astype(jnp.float32)
+    decay = jnp.exp(dt32[..., None] * A[None, None])                # (B,S,i,N)
+    drive = (dt32 * u.astype(jnp.float32))[..., None] \
+        * Bm.astype(jnp.float32)[:, :, None, :]                     # (B,S,i,N)
+
+    # h_t = decay_t * h_{t-1} + drive_t  — associative over t
+    def combine(a, b):
+        da, xa = a
+        db, xb = b
+        return da * db, xb + db * xa
+
+    # chunked associative scan: the (B,S,inner,N) state trajectory never
+    # materializes for the full sequence — bounded at chunk granularity,
+    # chunk boundaries checkpointed for the backward pass.
+    chunk = 256
+    while S % chunk:
+        chunk //= 2
+    n_chunks = S // chunk
+
+    def chunk_body(h0, xs):
+        dchunk, xchunk, cchunk = xs                        # (B,c,i,N) x2
+        d0 = jnp.concatenate([jnp.ones_like(dchunk[:, :1]), dchunk], axis=1)
+        x0 = jnp.concatenate([h0[:, None], xchunk], axis=1)
+        _, hs = jax.lax.associative_scan(combine, (d0, x0), axis=1)
+        hs = hs[:, 1:]
+        yc = jnp.einsum("bsin,bsn->bsi", hs, cchunk)
+        return hs[:, -1], yc
+
+    chunk_body = jax.checkpoint(chunk_body, prevent_cse=False)
+    dc = decay.reshape(B, n_chunks, chunk, inner, -1).swapaxes(0, 1)
+    xc = drive.reshape(B, n_chunks, chunk, inner, -1).swapaxes(0, 1)
+    cc = Cm.astype(jnp.float32).reshape(B, n_chunks, chunk, -1).swapaxes(0, 1)
+    h_last, ys = jax.lax.scan(chunk_body, state["h"], (dc, xc, cc))
+    y = ys.swapaxes(0, 1).reshape(B, S, inner)
+    y = y.astype(x.dtype) + u * p["D"].astype(x.dtype)[None, None]
+    y = y * jax.nn.silu(z)
+    out = y @ use_weight(p["w_out"].astype(x.dtype), ("model", None))
+    return out, {"h": h_last, "conv": conv_state.astype(jnp.float32)}
+
+
+def apply_mamba_step(cfg, p, x, state) -> Tuple[jnp.ndarray, dict]:
+    """x: (B, 1, d) decode — O(1) update."""
+    B, _, d = x.shape
+    s = cfg.ssm
+    inner = s.expand * d
+    uz = x[:, 0] @ use_weight(p["w_in"].astype(x.dtype), (None, "model"))
+    u_raw, z = uz[..., :inner], uz[..., inner:]
+    k = p["conv_w"].shape[0]
+    window = jnp.concatenate([state["conv"].astype(x.dtype), u_raw[:, None, :]], axis=1)
+    u = jax.nn.silu(jnp.einsum("bki,ki->bi", window, p["conv_w"].astype(x.dtype)))
+    dt, Bm, Cm = _features(cfg, p, u)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dt32 = dt.astype(jnp.float32)
+    decay = jnp.exp(dt32[..., None] * A[None])
+    h = decay * state["h"] + (dt32 * u.astype(jnp.float32))[..., None] \
+        * Bm.astype(jnp.float32)[:, None, :]
+    y = jnp.einsum("bin,bn->bi", h, Cm.astype(jnp.float32)).astype(x.dtype)
+    y = y + u * p["D"].astype(x.dtype)[None]
+    y = y * jax.nn.silu(z)
+    out = (y @ use_weight(p["w_out"].astype(x.dtype), ("model", None)))[:, None, :]
+    return out, {"h": h, "conv": window[:, 1:, :].astype(jnp.float32)}

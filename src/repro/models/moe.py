@@ -1,0 +1,149 @@
+"""Mixture-of-Experts FFN (dbrx 16e/top-4; qwen2-moe 60e/top-4 + shared).
+
+Capacity-based dispatch via scatter/gather (``segment``-style) rather than
+one-hot einsums: dispatch cost stays O(T·k·d) instead of O(T·E·C·d), so the
+compiled FLOPs reflect useful work (important for the roofline's
+MODEL_FLOPS/HLO_FLOPs ratio).  Expert weights carry a leading expert axis —
+sharded over the mesh "model" axis when divisible (expert parallelism).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding.context import shard_activations, use_weight
+from .layers import apply_mlp, init_mlp, normal_init
+
+
+def init_moe(key, cfg, dtype=jnp.float32):
+    e = cfg.moe
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+    gated = cfg.mlp in ("swiglu", "geglu")
+    p = {
+        "router": normal_init(ks[0], (d, e.n_experts), dtype=jnp.float32),
+        "w_in": normal_init(ks[1], (e.n_experts, d, e.d_ff_expert), dtype=dtype),
+        "w_out": normal_init(ks[2], (e.n_experts, e.d_ff_expert, d), dtype=dtype),
+    }
+    if gated:
+        p["w_gate"] = normal_init(ks[3], (e.n_experts, d, e.d_ff_expert),
+                                  dtype=dtype)
+    if e.n_shared_experts:
+        import dataclasses
+
+        class _C:  # minimal cfg view for the shared FFN
+            mlp = cfg.mlp
+            n_layers = cfg.n_layers
+        p["shared"] = init_mlp(ks[4], _C, d,
+                               e.d_ff_expert * e.n_shared_experts, dtype=dtype)
+    return p
+
+
+_EP_IN = (("model", None, None), (None, None, "model"))
+_EP_OUT = (("model", None, None), (None, "model", None))
+
+
+def _expert_ffn(cfg, p, x):
+    """x: (B, E, C, d) -> (B, E, C, d), batched over group + expert axes.
+    Expert weights are constrained to EP (expert axis over "model") when
+    the expert count divides, else to TP on the expert FFN dim."""
+    h = jnp.einsum("becd,edf->becf", x, use_weight(p["w_in"].astype(x.dtype),
+                                                   *_EP_IN))
+    if cfg.mlp == "swiglu":
+        g = jnp.einsum("becd,edf->becf", x,
+                       use_weight(p["w_gate"].astype(x.dtype), *_EP_IN))
+        h = jax.nn.silu(g) * h
+    elif cfg.mlp == "geglu":
+        g = jnp.einsum("becd,edf->becf", x,
+                       use_weight(p["w_gate"].astype(x.dtype), *_EP_IN))
+        h = jax.nn.gelu(g, approximate=True) * h
+    elif cfg.mlp == "relu2":
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        h = jax.nn.gelu(h, approximate=True)
+    return jnp.einsum("becf,efd->becd", h,
+                      use_weight(p["w_out"].astype(x.dtype), *_EP_OUT))
+
+
+def apply_moe(cfg, p, x) -> Tuple[jnp.ndarray, dict]:
+    """x: (B, S, d) -> (out, aux) with load-balance/z losses in aux.
+
+    Dispatch is *grouped by batch row*: each sample scatters its own tokens
+    into per-expert buffers (capacity enforced per group, Switch-style).
+    Because the group axis is the data-sharded batch axis, the
+    scatter/gather never crosses devices — GSPMD keeps dispatch local and
+    the only collectives are the (small) expert-weight gathers.  A global
+    buffer here previously cost a 960 GiB fp32 all-reduce per step.
+    """
+    e = cfg.moe
+    B, S, d = x.shape
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        use_weight(p["router"], (None, None)))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, e.top_k)     # (B, S, k)
+    gate_vals = gate_vals / (jnp.sum(gate_vals, -1, keepdims=True) + 1e-9)
+
+    # capacity per expert per group (= batch row)
+    cap = int(max(e.top_k, S * e.top_k * e.capacity_factor / e.n_experts))
+    cap = min(cap, S)
+    Tk = S * e.top_k
+
+    flat_ids = expert_ids.reshape(B, Tk)                       # (B, S*k)
+    # position of each routed token within its expert's queue, via sort:
+    # O(Tk log Tk) and O(Tk) memory instead of the O(Tk x E) one-hot cumsum
+    order = jnp.argsort(flat_ids, axis=1, stable=True)
+    sorted_ids = jnp.take_along_axis(flat_ids, order, axis=1)
+    iota_e = jnp.arange(e.n_experts, dtype=flat_ids.dtype)
+    counts = jnp.sum(flat_ids[:, :, None] == iota_e[None, None], axis=1)
+    starts = jnp.cumsum(counts, axis=1) - counts               # (B, E)
+    ranks_sorted = jnp.arange(Tk, dtype=flat_ids.dtype)[None, :] \
+        - jnp.take_along_axis(starts, sorted_ids, axis=1)
+    pos = jnp.zeros_like(flat_ids)
+    pos = jnp.take_along_axis(
+        pos.at[jnp.arange(B)[:, None], order].set(ranks_sorted),
+        jnp.arange(Tk)[None, :], axis=1)
+    keep = pos < cap                                           # drop overflow
+    # overflow tokens get an out-of-bounds sentinel: the scatter drops them
+    # (mode='drop') and the gather back fills zeros (mode='fill').  With
+    # unique in-bounds indices + explicit vmap batching dims GSPMD keeps the
+    # whole dispatch local to each data shard — ZERO collectives (a trash-row
+    # formulation previously cost a ~1 TiB all-gather per step).
+    slot = jnp.where(keep, flat_ids * cap + pos, e.n_experts * cap)
+
+    xrep = shard_activations(
+        jnp.repeat(x.reshape(B, S, d), e.top_k, axis=1))       # (B, S*k, d)
+    slot = shard_activations(slot)
+    buf = shard_activations(jnp.zeros((B, e.n_experts * cap, d), x.dtype))
+    buf = shard_activations(jax.vmap(lambda b, idx, val: b.at[idx].set(
+        val, mode="drop", unique_indices=True))(buf, slot, xrep))
+    expert_in = buf.reshape(B, e.n_experts, cap, d)
+
+    expert_out = _expert_ffn(cfg, p, expert_in)
+
+    # gather back + combine with gates (batched gather, local per shard)
+    flat_out = shard_activations(expert_out.reshape(B, e.n_experts * cap, d))
+    routed = shard_activations(jax.vmap(lambda f, idx: f.at[idx].get(
+        mode="fill", fill_value=0))(flat_out, slot))
+    gates = (gate_vals.reshape(B, Tk) * keep).astype(x.dtype)
+    combined = jnp.sum((routed * gates[..., None]).reshape(B, S, e.top_k, d),
+                       axis=2)
+
+    if e.n_shared_experts:
+        class _C:
+            mlp = cfg.mlp
+            n_layers = cfg.n_layers
+        combined = combined + apply_mlp(_C, p["shared"], x.reshape(B * S, d)
+                                        ).reshape(B, S, d)
+
+    # aux losses (Switch-style load balance + router z-loss)
+    density = jnp.mean(jax.nn.one_hot(expert_ids, e.n_experts,
+                                      dtype=jnp.float32), axis=(0, 1, 2))
+    density_proxy = jnp.mean(probs, axis=(0, 1))
+    aux = {
+        "moe_aux": e.n_experts * jnp.sum(density * density_proxy) * e.aux_loss,
+        "moe_z": jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2) * e.router_z_loss,
+    }
+    return combined, aux

@@ -1,0 +1,180 @@
+"""RWKV6 "Finch" token mixer: token shift + data-dependent per-channel decay
+WKV recurrence (arXiv:2404.05892), plus the RWKV channel-mix FFN.
+
+State per head: S ∈ R^{hd × hd}; per step
+    y_t = r_t · (S_{t-1} + (u ⊙ k_t) v_tᵀ)
+    S_t = diag(w_t) S_{t-1} + k_t v_tᵀ
+with w_t = exp(-exp(ŵ_t)) data-dependent via a LoRA on the shifted input.
+
+Sequence mode uses ``lax.scan`` (the Pallas kernel in kernels/rwkv6 is the
+TPU fast path); decode mode is a single O(1) state update — this is why
+rwkv6 runs the long_500k cell.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding.context import use_weight
+from .layers import normal_init
+
+
+def init_rwkv(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    hd = cfg.ssm.head_dim
+    H = d // hd
+    ks = jax.random.split(key, 12)
+    lora = max(32, d // 16)
+    return {
+        "mix_r": jnp.full((d,), 0.5, dtype), "mix_k": jnp.full((d,), 0.5, dtype),
+        "mix_v": jnp.full((d,), 0.5, dtype), "mix_g": jnp.full((d,), 0.5, dtype),
+        "mix_w": jnp.full((d,), 0.5, dtype),
+        "wr": normal_init(ks[0], (d, d), dtype=dtype),
+        "wk": normal_init(ks[1], (d, d), dtype=dtype),
+        "wv": normal_init(ks[2], (d, d), dtype=dtype),
+        "wg": normal_init(ks[3], (d, d), dtype=dtype),
+        "wo": normal_init(ks[4], (d, d), dtype=dtype),
+        # data-dependent decay LoRA: d -> lora -> d
+        "w_decay_a": normal_init(ks[5], (d, lora), dtype=dtype),
+        "w_decay_b": normal_init(ks[6], (lora, d), dtype=dtype),
+        "decay_base": jnp.zeros((d,), dtype),
+        "bonus_u": normal_init(ks[7], (H, hd), scale=0.1, dtype=dtype),
+        "ln_x_scale": jnp.ones((d,), dtype),
+    }
+
+
+def init_rwkv_state(cfg, batch: int, dtype=jnp.float32):
+    d = cfg.d_model
+    hd = cfg.ssm.head_dim
+    H = d // hd
+    return {"shift": jnp.zeros((batch, d), dtype),
+            "wkv": jnp.zeros((batch, H, hd, hd), jnp.float32)}
+
+
+def _mix(x, x_prev, m):
+    return x * m + x_prev * (1.0 - m)
+
+
+def _projections(p, x, x_prev, dtype):
+    col = lambda w: use_weight(w.astype(dtype), (None, "model"))
+    r = _mix(x, x_prev, p["mix_r"].astype(dtype)) @ col(p["wr"])
+    k = _mix(x, x_prev, p["mix_k"].astype(dtype)) @ col(p["wk"])
+    v = _mix(x, x_prev, p["mix_v"].astype(dtype)) @ col(p["wv"])
+    g = _mix(x, x_prev, p["mix_g"].astype(dtype)) @ col(p["wg"])
+    xw = _mix(x, x_prev, p["mix_w"].astype(dtype))
+    dec = jnp.tanh(xw @ p["w_decay_a"].astype(dtype)) @ p["w_decay_b"].astype(dtype)
+    w = jnp.exp(-jnp.exp((p["decay_base"].astype(jnp.float32)
+                          + dec.astype(jnp.float32))))
+    return r, k, v, g, w
+
+
+def _group_norm(x, scale, H):
+    """LayerNorm per head over hd (RWKV's ln_x)."""
+    B = x.shape[0]
+    xs = x.reshape(B, H, -1).astype(jnp.float32)
+    mu = jnp.mean(xs, -1, keepdims=True)
+    var = jnp.var(xs, -1, keepdims=True)
+    y = (xs - mu) * jax.lax.rsqrt(var + 64e-5)
+    return (y.reshape(B, -1) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def _wkv_step(S, r, k, v, w, u, H, hd):
+    """One recurrence step. r,k,v,w: (B, d); S: (B,H,hd,hd) fp32."""
+    B = r.shape[0]
+    rh = r.reshape(B, H, hd).astype(jnp.float32)
+    kh = k.reshape(B, H, hd).astype(jnp.float32)
+    vh = v.reshape(B, H, hd).astype(jnp.float32)
+    wh = w.reshape(B, H, hd)
+    kv = kh[..., :, None] * vh[..., None, :]              # (B,H,hd,hd)
+    y = jnp.einsum("bhi,bhij->bhj", rh, S + u[None, :, :, None] * kv)
+    S_new = wh[..., :, None] * S + kv
+    return S_new, y.reshape(B, H * hd)
+
+
+def apply_rwkv_seq(cfg, p, x, state) -> Tuple[jnp.ndarray, dict]:
+    """x: (B, S, d) sequence mode (train/prefill) via scan over time."""
+    B, S, d = x.shape
+    hd = cfg.ssm.head_dim
+    H = d // hd
+    x_prev = jnp.concatenate([state["shift"].astype(x.dtype)[:, None, :],
+                          x[:, :-1, :]], axis=1)
+    r, k, v, g, w = _projections(p, x, x_prev, x.dtype)
+    u = p["bonus_u"].astype(jnp.float32)
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp
+        S_new, y = _wkv_step(S, r_t, k_t, v_t, w_t, u, H, hd)
+        return S_new, y
+
+    # chunked + checkpointed: only chunk-boundary states are saved for the
+    # backward pass (otherwise a 4k-step scan would save 4k full WKV states)
+    chunk = 256
+    while S % chunk:
+        chunk //= 2
+    n_chunks = S // chunk
+
+    def chunk_body(S0, inp_chunk):
+        xs = tuple(jnp.moveaxis(t, 1, 0) for t in inp_chunk)
+        S1, ys = jax.lax.scan(step, S0, xs)
+        return S1, jnp.moveaxis(ys, 0, 1)
+
+    chunk_body = jax.checkpoint(chunk_body, prevent_cse=False)
+
+    def outer(S0, inp_chunk):
+        return chunk_body(S0, inp_chunk)
+
+    rc = r.reshape(B, n_chunks, chunk, d).swapaxes(0, 1)
+    kc = k.reshape(B, n_chunks, chunk, d).swapaxes(0, 1)
+    vc = v.reshape(B, n_chunks, chunk, d).swapaxes(0, 1)
+    wc = w.reshape(B, n_chunks, chunk, d).swapaxes(0, 1)
+    S_final, ys = jax.lax.scan(outer, state["wkv"], (rc, kc, vc, wc))
+    y = ys.swapaxes(0, 1).reshape(B, S, d).astype(x.dtype)  # (B,S,d)
+    y = _group_norm(y.reshape(B * S, d), p["ln_x_scale"], H).reshape(B, S, d)
+    y = y * jax.nn.silu(g)
+    out = y @ use_weight(p["wo"].astype(x.dtype), ("model", None))
+    new_state = {"shift": x[:, -1, :].astype(jnp.float32), "wkv": S_final}
+    return out, new_state
+
+
+def apply_rwkv_step(cfg, p, x, state) -> Tuple[jnp.ndarray, dict]:
+    """x: (B, 1, d) decode mode — O(1) per token."""
+    B, _, d = x.shape
+    hd = cfg.ssm.head_dim
+    H = d // hd
+    xt = x[:, 0, :]
+    r, k, v, g, w = _projections(p, xt, state["shift"].astype(x.dtype), x.dtype)
+    u = p["bonus_u"].astype(jnp.float32)
+    S_new, y = _wkv_step(state["wkv"], r, k, v, w, u, H, hd)
+    y = _group_norm(y, p["ln_x_scale"], H).astype(x.dtype)
+    y = y * jax.nn.silu(g)
+    out = (y @ use_weight(p["wo"].astype(x.dtype), ("model", None))
+           )[:, None, :]
+    return out, {"shift": xt.astype(jnp.float32), "wkv": S_new}
+
+
+# ----------------------------------------------------------------------
+# RWKV channel mix (the FFN used by the rwkv6 family)
+# ----------------------------------------------------------------------
+def init_channel_mix(key, cfg, dtype=jnp.float32):
+    d, ff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {"mix_k": jnp.full((d,), 0.5, dtype),
+            "mix_r": jnp.full((d,), 0.5, dtype),
+            "wk": normal_init(ks[0], (d, ff), dtype=dtype),
+            "wv": normal_init(ks[1], (ff, d), dtype=dtype),
+            "wr": normal_init(ks[2], (d, d), dtype=dtype)}
+
+
+def apply_channel_mix(cfg, p, x, shift_state):
+    """x: (B,S,d); shift_state: (B,d) last token of previous chunk."""
+    x_prev = jnp.concatenate([shift_state.astype(x.dtype)[:, None, :],
+                          x[:, :-1, :]], axis=1)
+    xk = _mix(x, x_prev, p["mix_k"].astype(x.dtype))
+    xr = _mix(x, x_prev, p["mix_r"].astype(x.dtype))
+    k = jnp.square(jax.nn.relu(
+        xk @ use_weight(p["wk"].astype(x.dtype), (None, "model"))))
+    r = jax.nn.sigmoid(xr @ use_weight(p["wr"].astype(x.dtype), (None, None)))
+    return r * (k @ use_weight(p["wv"].astype(x.dtype), ("model", None))), \
+        x[:, -1, :]

@@ -1,0 +1,8 @@
+"""Optimizers + distributed-optimization tricks."""
+from .adamw import AdamW, AdamWState, Q8State, dequantize_q8, quantize_q8
+from .compress import (compress_with_feedback, compressed_psum,
+                       init_error_feedback)
+
+__all__ = ["AdamW", "AdamWState", "Q8State", "quantize_q8", "dequantize_q8",
+           "compress_with_feedback", "compressed_psum",
+           "init_error_feedback"]

@@ -1,0 +1,144 @@
+"""AdamW with global-norm clipping, warmup-cosine schedule, and optional
+8-bit (blockwise-quantized) first/second moments.
+
+The 8-bit state is a *distributed-optimization* feature (DESIGN.md §5): for
+the 340B config it cuts optimizer memory from 8 bytes/param to ~2.06,
+which is what lets nemotron-4-340b train on a single 256-chip v5e pod.
+Quantization is blockwise absmax along the last axis (block 256) with
+dequant-update-requant each step; error stays bounded by the block scale.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+BLOCK = 128
+
+
+# ----------------------------------------------------------------------
+# blockwise int8 quantization
+# ----------------------------------------------------------------------
+def quantize_q8(x):
+    """Blockwise-absmax int8 quantization along the LAST axis only.
+
+    codes: int8 of shape (*lead, nb, BLOCK); scales: f32 (*lead, nb).
+    Blocking only the trailing axis keeps every leading (FSDP/TP-sharded)
+    dimension intact — a flatten-the-whole-tensor layout forced GSPMD into
+    full rematerialization (replicate-then-reshard) of fp32 moments.
+    """
+    if x.ndim == 0:
+        x = x[None]
+    *lead, last = x.shape
+    pad = (-last) % BLOCK
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * len(lead) + [(0, pad)])
+    nb = (last + pad) // BLOCK
+    xb = x.reshape(*lead, nb, BLOCK)
+    scale = jnp.max(jnp.abs(xb), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    codes = jnp.clip(jnp.round(xb / scale[..., None]), -127, 127
+                     ).astype(jnp.int8)
+    return codes, scale.astype(jnp.float32)
+
+
+def dequantize_q8(codes, scales, shape):
+    xb = codes.astype(jnp.float32) * scales[..., None]
+    *lead, nb, blk = xb.shape
+    full = xb.reshape(*lead, nb * blk)
+    last = shape[-1] if shape else 1
+    if nb * blk != last:
+        full = full[..., :last]
+    return full.reshape(shape)
+
+
+class Q8State(NamedTuple):
+    codes: Any
+    scales: Any
+
+
+# ----------------------------------------------------------------------
+class AdamWState(NamedTuple):
+    step: Any
+    m: Any
+    v: Any
+
+
+class AdamW:
+    def __init__(self, lr: float = 3e-4, b1: float = 0.9, b2: float = 0.95,
+                 eps: float = 1e-8, weight_decay: float = 0.1,
+                 clip_norm: float = 1.0, warmup: int = 100,
+                 total_steps: int = 10_000, quantized: bool = False):
+        self.lr, self.b1, self.b2, self.eps = lr, b1, b2, eps
+        self.weight_decay = weight_decay
+        self.clip_norm = clip_norm
+        self.warmup, self.total_steps = warmup, total_steps
+        self.quantized = quantized
+
+    # -- schedule -------------------------------------------------------
+    def schedule(self, step):
+        warm = jnp.minimum(step / max(1, self.warmup), 1.0)
+        prog = jnp.clip((step - self.warmup)
+                        / max(1, self.total_steps - self.warmup), 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+        return self.lr * warm * (0.1 + 0.9 * cos)
+
+    # -- state ----------------------------------------------------------
+    def _zeros_like(self, p):
+        if self.quantized and p.ndim >= 2:
+            codes, scales = quantize_q8(jnp.zeros(p.shape, jnp.float32))
+            return Q8State(codes, scales)
+        return jnp.zeros(p.shape, jnp.float32)
+
+    def init(self, params) -> AdamWState:
+        zeros = jax.tree_util.tree_map(self._zeros_like, params)
+        zeros2 = jax.tree_util.tree_map(self._zeros_like, params)
+        return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros, v=zeros2)
+
+    # -- update ---------------------------------------------------------
+    def update(self, grads, state: AdamWState, params):
+        step = state.step + 1
+        lr = self.schedule(step)
+
+        # global-norm clip (f32 accumulation)
+        leaves = jax.tree_util.tree_leaves(grads)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in leaves))
+        scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-9))
+
+        b1, b2 = self.b1, self.b2
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32) * scale
+            is_q = isinstance(m, Q8State)
+            mf = dequantize_q8(m.codes, m.scales, p.shape) if is_q else m
+            vf = dequantize_q8(v.codes, v.scales, p.shape) if is_q else v
+            mf = b1 * mf + (1 - b1) * g
+            vf = b2 * vf + (1 - b2) * jnp.square(g)
+            mh, vh = mf / c1, vf / c2
+            delta = mh / (jnp.sqrt(vh) + self.eps)
+            if p.ndim >= 2:  # decoupled weight decay on matrices only
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+            if is_q:
+                mc, ms = quantize_q8(mf)
+                vc, vs = quantize_q8(vf)
+                return new_p, Q8State(mc, ms), Q8State(vc, vs)
+            return new_p, mf, vf
+
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state.m)
+        flat_v = treedef.flatten_up_to(state.v)
+        out = [upd(p, g, m, v) for p, g, m, v
+               in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_params = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        new_v = treedef.unflatten([o[2] for o in out])
+        metrics = {"grad_norm": gnorm, "lr": lr}
+        return new_params, AdamWState(step, new_m, new_v), metrics

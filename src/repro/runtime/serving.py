@@ -1,0 +1,118 @@
+"""Batched serving engine on top of the GrJAX scheduler.
+
+Requests are queued, grouped into fixed-shape batches (same prompt length →
+one compiled prefill/decode pair, no retracing), and each batch's
+prefill+decode pipeline is issued as a *computational element*: independent
+batches land on separate scheduler lanes and overlap (the paper's
+space-sharing applied to inference), while the shared read-only weights are
+tracked as a const dependency — exactly the two-branch pattern of Fig. 2.
+
+Per-slot ragged positions (token-level continuous batching) would need a
+vector-``pos`` decode mask; noted as future work in DESIGN.md.
+"""
+from __future__ import annotations
+
+import collections
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..core import GrScheduler, const, make_scheduler, out
+from ..core.managed import ManagedValue
+from ..models import init_cache
+from ..models.config import ArchConfig
+from .steps import make_decode_step, make_prefill_step
+
+
+@dataclass
+class Request:
+    rid: int
+    tokens: np.ndarray            # (prompt_len,)
+    new_tokens: int
+    result: Optional[np.ndarray] = None
+
+
+class ServingEngine:
+    def __init__(self, cfg: ArchConfig, params, *, batch_size: int = 2,
+                 max_new_tokens: int = 16,
+                 scheduler: Optional[GrScheduler] = None) -> None:
+        self.cfg = cfg
+        self.batch = batch_size
+        self.max_new = max_new_tokens
+        self.sched = scheduler or make_scheduler("parallel")
+        self.params_v = ManagedValue(self.sched, params, name="weights")
+        self._queue: "collections.deque[Request]" = collections.deque()
+        self._rid = 0
+        self._prefill = jax.jit(make_prefill_step(cfg))
+        self._decode = jax.jit(make_decode_step(cfg))
+        self._pending: List[tuple] = []
+
+    # ------------------------------------------------------------------
+    def submit(self, tokens: np.ndarray, new_tokens: int = 0) -> Request:
+        req = Request(self._rid, np.asarray(tokens, np.int32),
+                      new_tokens or self.max_new)
+        self._rid += 1
+        self._queue.append(req)
+        return req
+
+    # ------------------------------------------------------------------
+    def _batch_kernel(self, prompt_len: int, new_tokens: int):
+        cfg = self.cfg
+        max_len = prompt_len + new_tokens
+        prefill, decode = self._prefill, self._decode
+
+        def kernel(params, toks, _out):
+            cache = init_cache(cfg, toks.shape[0], max_len)
+            logits, cache = prefill(params, {"tokens": toks}, cache)
+            nxt = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+            outs = [nxt]
+            for i in range(new_tokens - 1):
+                nxt, _, cache = decode(params, nxt, cache,
+                                       jnp.int32(prompt_len + i))
+                outs.append(nxt)
+            return jnp.concatenate(outs, axis=1)
+
+        return kernel
+
+    def flush(self) -> None:
+        """Assemble queued requests into fixed-shape batches and issue them
+        through the scheduler (each batch = one lane-schedulable element)."""
+        by_shape: Dict[tuple, List[Request]] = collections.defaultdict(list)
+        while self._queue:
+            r = self._queue.popleft()
+            by_shape[(len(r.tokens), r.new_tokens)].append(r)
+        for (plen, ntok), reqs in by_shape.items():
+            for i in range(0, len(reqs), self.batch):
+                group = reqs[i:i + self.batch]
+                toks = np.stack([r.tokens for r in group])
+                pad = self.batch - len(group)
+                if pad:  # fixed shapes -> no retracing
+                    toks = np.concatenate(
+                        [toks, np.zeros((pad, plen), np.int32)])
+                t_in = self.sched.array(toks, name=f"prompts_{group[0].rid}")
+                t_out = self.sched.array(
+                    np.zeros((self.batch, ntok), np.int32),
+                    name=f"gen_{group[0].rid}")
+                self.sched.launch(
+                    self._batch_kernel(plen, ntok),
+                    [const(self.params_v), const(t_in), out(t_out)],
+                    name=f"serve_b{group[0].rid}")
+                self._pending.append((group, t_out))
+
+    def collect(self) -> List[Request]:
+        """Host-reads each batch's output (syncing only its lane) and
+        attaches results to the requests."""
+        done = []
+        for group, t_out in self._pending:
+            vals = np.asarray(t_out)
+            for j, r in enumerate(group):
+                r.result = vals[j]
+                done.append(r)
+        self._pending.clear()
+        return done
+
+    def stats(self) -> dict:
+        return self.sched.stats()

@@ -1,0 +1,73 @@
+"""Submesh space-sharing: the paper's SM-level space-sharing re-expressed at
+pod level (DESIGN.md §2).
+
+TPU cores run one program at a time, so *within-chip* space-sharing does not
+transfer; the transferable insight is that **independent tasks should occupy
+idle resources**.  `SubmeshPool` splits a device mesh into disjoint
+submeshes ("lanes" of whole devices) and the GrJAX stream manager schedules
+independent device tasks (ensemble members, eval-during-train, per-request
+serving) onto them concurrently — JAX dispatches asynchronously per device,
+so disjoint submeshes genuinely execute in parallel.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from ..core import GrScheduler, const, out
+from ..core.managed import ManagedValue
+
+
+class SubmeshPool:
+    """Disjoint submeshes acting as device-level lanes."""
+
+    def __init__(self, devices=None, n_lanes: int = 2,
+                 axis_names=("data", "model")) -> None:
+        devices = list(devices if devices is not None else jax.devices())
+        assert len(devices) % n_lanes == 0, "devices must split evenly"
+        per = len(devices) // n_lanes
+        self.meshes: List[Mesh] = []
+        for i in range(n_lanes):
+            devs = np.asarray(devices[i * per:(i + 1) * per])
+            self.meshes.append(Mesh(devs.reshape(-1, 1), axis_names))
+
+    def __len__(self) -> int:
+        return len(self.meshes)
+
+    def mesh(self, lane: int) -> Mesh:
+        return self.meshes[lane % len(self.meshes)]
+
+
+class SpaceSharedRunner:
+    """Run independent jitted tasks space-shared across a SubmeshPool, with
+    dependencies still inferred by the GrJAX scheduler."""
+
+    def __init__(self, pool: SubmeshPool,
+                 scheduler: Optional[GrScheduler] = None) -> None:
+        self.pool = pool
+        self.sched = scheduler or GrScheduler(policy="parallel",
+                                              max_lanes=len(pool))
+
+    def submit(self, fn: Callable, value_args: List, name: str = "task"):
+        """fn(*device_values) -> result; runs on the lane's submesh."""
+        result = ManagedValue(self.sched, None, name=f"{name}_out")
+
+        def kernel(*vals):
+            _out_placeholder = vals[-1]
+            ins = vals[:-1]
+            # the lane id chosen by the stream manager selects the submesh
+            lane = kernel_elem.stream or 0
+            mesh = self.pool.mesh(lane)
+            with mesh:
+                return fn(*ins)
+
+        kernel_elem = self.sched.launch(
+            kernel, [const(v) for v in value_args] + [out(result)],
+            name=name)
+        return result
+
+    def gather(self, results):
+        return [r.get() for r in results]

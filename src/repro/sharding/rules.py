@@ -1,0 +1,175 @@
+"""Parameter/activation sharding rules (DESIGN.md §5).
+
+Parallelism mapping over the production mesh ``("pod","data","model")``:
+
+* **DP**   — batch over ``pod`` × ``data``;
+* **FSDP** — every weight matrix additionally sharded over ``data`` (ZeRO-3;
+  GSPMD inserts the per-layer all-gathers / reduce-scatters);
+* **TP**   — head / FFN / expert / vocab dimensions over ``model``;
+* **EP**   — MoE expert axis over ``model`` when divisible, else the expert
+  FFN dim;
+* **SP**   — long sequences over ``data`` for prefill cells.
+
+Every rule is divisibility-guarded: an axis is applied to a dimension only
+when it divides evenly (e.g. hymba's 25 heads fall back to unsharded heads
+while its FFN still gets TP).  This is what makes all 10 architectures lower
+on the same mesh without bespoke configs.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    if name is None:
+        return 1
+    if isinstance(name, (tuple, list)):
+        out = 1
+        for n in name:
+            out *= _axis_size(mesh, n)
+        return out
+    return mesh.shape[name] if name in mesh.shape else 0
+
+
+def fit_spec(spec: Sequence, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Drop axes that don't exist in the mesh or don't divide the dim."""
+    fitted = []
+    for dim, ax in zip(shape, spec):
+        size = _axis_size(mesh, ax)
+        if ax is None or size == 0 or size == 1 or dim % size != 0:
+            fitted.append(None)
+        else:
+            fitted.append(ax)
+    return P(*fitted)
+
+
+def dp_axes(mesh: Mesh):
+    """The data-parallel axes present in this mesh."""
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    return axes if len(axes) > 1 else (axes[0] if axes else None)
+
+
+# ----------------------------------------------------------------------
+# parameter rules, keyed by the trailing path element
+# ----------------------------------------------------------------------
+def _param_rule(path: str, shape, mesh: Mesh, fsdp: str = "data") -> P:
+    """Spec for an *unstacked* parameter; `path` is dot-joined tree path."""
+    tp = "model"
+    leaf = path.split(".")[-1]
+    r = len(shape)
+
+    def S(*ax):
+        return fit_spec(ax, shape, mesh)
+
+    if leaf == "embed":
+        return S(tp, fsdp)                      # (V, d): vocab-TP + FSDP
+    if leaf == "lm_head":
+        return S(fsdp, tp)                      # (d, V)
+    if leaf in ("wq", "wk", "wv", "wg", "wr", "w_in", "w_gate", "w_decay_a",
+                "frontend_proj"):
+        if r == 3:                               # MoE expert weights (E, d, f)
+            return S(tp, fsdp, None) if shape[0] % _axis_size(mesh, tp) == 0 \
+                else S(None, fsdp, tp)
+        return S(fsdp, tp)                      # (d, out)
+    if leaf in ("wo", "w_out", "wv_out", "w_decay_b"):
+        if r == 3:                               # (E, f, d)
+            return S(tp, None, fsdp) if shape[0] % _axis_size(mesh, tp) == 0 \
+                else S(None, tp, fsdp)
+        return S(tp, fsdp)                      # (out, d)
+    if leaf == "router":
+        return S(fsdp, None)
+    if leaf in ("conv_w",):
+        return S(None, tp)
+    if leaf in ("A_log", "D", "dt_bias", "w_dt", "w_B", "w_C"):
+        return S(tp) if r == 1 else S(tp, None)
+    if leaf == "bonus_u":
+        return S(tp, None)                      # (H, hd)
+    # norms / scales / mixers / biases: replicate
+    return P(*([None] * r))
+
+
+def param_sharding(params, mesh: Mesh, fsdp=None):
+    """NamedSharding tree for a parameter tree (handles the stacked
+    ``n_groups`` leading axis under blocks/encoder).  FSDP spans every
+    data-parallel axis present (pod x data on the multi-pod mesh — ZeRO
+    degree 512, not 256)."""
+    if fsdp is None:
+        fsdp = dp_axes(mesh)
+
+    def one(path, leaf):
+        keys = [getattr(k, "key", getattr(k, "idx", None)) for k in path]
+        pstr = ".".join(str(k) for k in keys)
+        shape = leaf.shape
+        stacked = any(str(k) in ("blocks", "encoder") for k in keys)
+        if stacked and len(shape) >= 1:
+            inner = _param_rule(pstr, shape[1:], mesh, fsdp)
+            spec = P(*((None,) + tuple(inner)))
+        else:
+            spec = _param_rule(pstr, shape, mesh, fsdp)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+# ----------------------------------------------------------------------
+# activations / batches / caches
+# ----------------------------------------------------------------------
+def batch_spec(mesh: Mesh, seq_shard: bool = False) -> Dict[str, P]:
+    dp = dp_axes(mesh)
+    seq_ax = "model" if seq_shard else None
+    return {
+        "tokens": P(dp, seq_ax),
+        "labels": P(dp, seq_ax),
+        "frames": P(dp, seq_ax, None),
+        "patches": P(dp, None, None),
+    }
+
+
+def cache_sharding(cache, mesh: Mesh):
+    """KV caches: batch over DP, kv-heads over TP when divisible; recurrent
+    states: channel dims over TP."""
+    dp = dp_axes(mesh)
+
+    def one(path, leaf):
+        keys = [str(getattr(k, "key", getattr(k, "idx", ""))) for k in path]
+        name = keys[-1] if keys else ""
+        shape = leaf.shape
+        # caches carry a leading n_groups axis from the stacked scan
+        if name in ("k", "v", "cross_k", "cross_v"):
+            # kv-head TP when divisible, else shard the head_dim
+            if shape[3] % max(1, _axis_size(mesh, "model")) == 0:
+                spec = (None, dp, None, "model", None)  # (G,B,S,H,hd)
+            else:
+                spec = (None, dp, None, None, "model")
+        elif name == "wkv":
+            spec = (None, dp, "model", None, None)      # (G,B,H,hd,hd)
+        elif name == "h":
+            spec = (None, dp, "model", None)            # (G,B,inner,N)
+        elif name in ("shift", "cmix_shift"):
+            spec = (None, dp, "model")                  # (G,B,d)
+        elif name == "conv":
+            spec = (None, dp, None, "model")            # (G,B,k-1,inner)
+        else:
+            spec = (None,) * len(shape)
+        return NamedSharding(mesh, fit_spec(spec, shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def state_sharding(state_tree, params_sharding):
+    """Optimizer state mirrors parameter sharding (m, v, quantized blocks)."""
+
+    def one(leaf_sharding, state_leaf):
+        return leaf_sharding
+
+    return jax.tree_util.tree_map(lambda s: s, params_sharding)
+
+
+def logical_to_physical(mesh: Mesh, tree, sharding_tree):
+    return jax.tree_util.tree_map(
+        lambda x, s: jax.device_put(x, s), tree, sharding_tree)

@@ -1,0 +1,127 @@
+"""Paper benchmark suite: correctness under async scheduling + the paper's
+headline claims (always faster than serial; parity with the oracle)."""
+import numpy as np
+import pytest
+
+from repro.benchsuite import BENCHMARKS, GPUS, GTX1660S
+from repro.benchsuite.costmodel import sim_hardware
+from repro.core import make_scheduler
+
+TINY = 2e-5
+NAMES = sorted(BENCHMARKS)
+
+
+@pytest.mark.parametrize("name", NAMES)
+def test_parallel_execution_correct(name):
+    b = BENCHMARKS[name]
+    data = b.make_data(TINY)
+    s = make_scheduler("parallel")
+    try:
+        got = b.build(s, data, gpu=None, iters=2)
+        ref = b.run_reference(data, iters=2)
+        for k in ref:
+            np.testing.assert_allclose(got[k], ref[k], rtol=2e-3, atol=1e-4,
+                                       err_msg=f"{name}:{k}")
+    finally:
+        s.shutdown()
+
+
+@pytest.mark.parametrize("name", NAMES)
+def test_serial_equals_parallel(name):
+    b = BENCHMARKS[name]
+    data = b.make_data(TINY)
+
+    def run(policy):
+        s = make_scheduler(policy)
+        try:
+            return b.build(s, data, gpu=None, iters=2)
+        finally:
+            s.shutdown()
+
+    ser, par = run("serial"), run("parallel")
+    for k in ser:
+        np.testing.assert_allclose(par[k], ser[k], rtol=1e-5, atol=1e-6)
+
+
+def _makespan(bench, gpu, policy, scale=0.02, iters=4, **kw):
+    s = make_scheduler(policy, simulate=True,
+                       hw=sim_hardware(gpu, policy), **kw)
+    bench.build(s, bench.make_data(scale), gpu=gpu, iters=iters)
+    return s.timeline.makespan
+
+
+@pytest.mark.parametrize("gpu_name", sorted(GPUS))
+@pytest.mark.parametrize("name", NAMES)
+def test_parallel_always_faster_than_serial(name, gpu_name):
+    """§V-C: 'We always deliver better performance over the serial
+    scheduler'."""
+    b, gpu = BENCHMARKS[name], GPUS[gpu_name]
+    ts = _makespan(b, gpu, "serial")
+    tp = _makespan(b, gpu, "parallel")
+    assert tp < ts, f"{name}/{gpu_name}: parallel {tp} !< serial {ts}"
+
+
+@pytest.mark.parametrize("name", NAMES)
+def test_no_slowdown_vs_oracle(name):
+    """§V-D: no significant slowdown vs hand-optimized scheduling."""
+    b = BENCHMARKS[name]
+    tp = _makespan(b, GTX1660S, "parallel")
+    to = _makespan(b, GTX1660S, "parallel", oracle=True)
+    assert tp <= to * 1.02 + 1e-6, f"runtime {tp} vs oracle {to}"
+
+
+def test_geomean_speedup_band():
+    """Geomean speedup across benchmarks x GPUs lands in the paper's band
+    (44% reported; simulator calibrated to 35-75%)."""
+    vals = []
+    for gpu in GPUS.values():
+        for b in BENCHMARKS.values():
+            vals.append(_makespan(b, gpu, "serial")
+                        / _makespan(b, gpu, "parallel"))
+    gm = float(np.exp(np.mean(np.log(vals))))
+    assert 1.30 <= gm <= 1.80, f"geomean speedup {gm}"
+
+
+def test_vec_speedup_is_pure_transfer_overlap():
+    """Fig. 11: VEC has no computation-computation overlap; its win comes
+    entirely from transfer/compute overlap."""
+    b = BENCHMARKS["VEC"]
+    s = make_scheduler("parallel", simulate=True,
+                       hw=sim_hardware(GTX1660S, "parallel"))
+    b.build(s, b.make_data(0.02), gpu=GTX1660S, iters=4)
+    m = s.timeline.overlap_metrics()
+    assert m["CC"] < 0.05
+    assert m["CT"] > 0.5
+
+
+def test_bs_space_shares():
+    """Fig. 11: B&S overlaps its 10 independent kernels (high CC)."""
+    b = BENCHMARKS["B&S"]
+    s = make_scheduler("parallel", simulate=True,
+                       hw=sim_hardware(GTX1660S, "parallel"))
+    b.build(s, b.make_data(0.02), gpu=GTX1660S, iters=4)
+    assert s.timeline.overlap_metrics()["CC"] > 0.5
+
+
+def test_footprints_scale(tmp_path):
+    for b in BENCHMARKS.values():
+        assert b.footprint_bytes(0.02) > b.footprint_bytes(0.002)
+
+
+def test_prefetch_disabled_slower():
+    """§V-C: disabling automatic prefetching leaves the page-fault
+    controller as the bottleneck — still faster than serial, but worse
+    than prefetching."""
+    b = BENCHMARKS["VEC"]
+    gpu = GTX1660S
+
+    def t(policy, prefetch):
+        s = make_scheduler(policy, simulate=True,
+                           hw=sim_hardware(gpu, policy, prefetch=prefetch))
+        b.build(s, b.make_data(0.02), gpu=gpu, iters=4)
+        return s.timeline.makespan
+
+    t_serial = t("serial", True)
+    t_par = t("parallel", True)
+    t_par_nopf = t("parallel", False)
+    assert t_par < t_par_nopf <= t_serial * 1.001

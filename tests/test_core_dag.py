@@ -1,0 +1,203 @@
+"""Unit + property tests for the runtime DAG dependency inference (Fig. 3)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (ComputationDAG, ComputationalElement, ElementKind,
+                        const, inout, out)
+
+
+class FakeArray:
+    def __init__(self, name):
+        self.name = name
+
+
+def ce(*args, name=""):
+    return ComputationalElement(fn=None, args=tuple(args), name=name)
+
+
+def test_raw_dependency():
+    dag = ComputationDAG()
+    A = FakeArray("A")
+    k1 = ce(inout(A), name="K1")
+    dag.add(k1)
+    k2 = ce(const(A), name="K2")
+    dag.add(k2)
+    assert k2.parents == [k1]
+
+
+def test_fig3_reader_does_not_consume_writer_entry():
+    """Fig. 3 case C: consecutive readers all depend on the writer."""
+    dag = ComputationDAG()
+    A = FakeArray("A")
+    k1 = ce(inout(A), name="K1")
+    dag.add(k1)
+    k2 = ce(const(A), name="K2")
+    dag.add(k2)
+    k3 = ce(const(A), name="K3")
+    dag.add(k3)
+    assert k2.parents == [k1]
+    assert k3.parents == [k1]          # depends on K1, NOT on K2
+    assert id(A) in k1.dep_set          # K1's set not updated by readers
+
+
+def test_fig3_war_antidependency_through_readers():
+    """Fig. 3 case B: a writer after readers depends on the readers only."""
+    dag = ComputationDAG()
+    A = FakeArray("A")
+    k1 = ce(inout(A), name="K1")
+    dag.add(k1)
+    k2 = ce(const(A), name="K2")
+    dag.add(k2)
+    k3 = ce(const(A), name="K3")
+    dag.add(k3)
+    k4 = ce(inout(A), name="K4")
+    dag.add(k4)
+    assert set(k4.parents) == {k2, k3}  # both readers, not K1
+    # the write consumed every earlier dependency-set entry for A
+    assert id(A) not in k1.dep_set
+    assert id(A) not in k2.dep_set
+    assert id(A) not in k3.dep_set
+
+
+def test_waw_dependency_without_readers():
+    dag = ComputationDAG()
+    A = FakeArray("A")
+    k1 = ce(out(A), name="K1")
+    dag.add(k1)
+    k2 = ce(out(A), name="K2")
+    dag.add(k2)
+    assert k2.parents == [k1]
+
+
+def test_independent_kernels_share_readonly_input():
+    """Two kernels reading the same const array must be independent (§IV-A)."""
+    dag = ComputationDAG()
+    X, Y, Z = FakeArray("X"), FakeArray("Y"), FakeArray("Z")
+    k1 = ce(const(X), out(Y), name="K1")
+    dag.add(k1)
+    k2 = ce(const(X), out(Z), name="K2")
+    dag.add(k2)
+    assert k2.parents == []
+
+
+def test_empty_dep_set_retires_from_frontier():
+    dag = ComputationDAG()
+    A = FakeArray("A")
+    k1 = ce(inout(A), name="K1")
+    dag.add(k1)
+    k2 = ce(inout(A), name="K2")
+    dag.add(k2)
+    assert not k1.active and k1 not in dag.frontier
+    assert k2.active
+
+
+def test_retire_propagates_to_ancestors():
+    dag = ComputationDAG()
+    A, B = FakeArray("A"), FakeArray("B")
+    k1 = ce(out(A), name="K1")
+    k2 = ce(const(A), out(B), name="K2")
+    dag.add(k1)
+    dag.add(k2)
+    dag.retire(k2)
+    assert not k1.active and not k2.active
+
+
+def test_diamond():
+    dag = ComputationDAG()
+    A, B, C = FakeArray("A"), FakeArray("B"), FakeArray("C")
+    k0 = ce(out(A), name="K0")
+    k1 = ce(const(A), out(B), name="K1")
+    k2 = ce(const(A), out(C), name="K2")
+    k3 = ce(const(B), const(C), name="K3")
+    for k in (k0, k1, k2, k3):
+        dag.add(k)
+    assert k1.parents == [k0] and k2.parents == [k0]
+    assert set(k3.parents) == {k1, k2}
+
+
+def test_duplicate_array_in_args_uses_strongest_mode():
+    dag = ComputationDAG()
+    A = FakeArray("A")
+    k1 = ce(out(A), name="K1")
+    dag.add(k1)
+    k2 = ce(const(A), inout(A), name="K2")  # same array twice
+    dag.add(k2)
+    k3 = ce(const(A), name="K3")
+    dag.add(k3)
+    assert k3.parents == [k2]   # K2 counted as writer
+
+
+# ----------------------------------------------------------------------
+# Property-based validation against a sequential-consistency oracle.
+# ----------------------------------------------------------------------
+
+@st.composite
+def programs(draw):
+    n_arrays = draw(st.integers(2, 5))
+    n_ops = draw(st.integers(1, 24))
+    ops = []
+    for _ in range(n_ops):
+        n_args = draw(st.integers(1, min(3, n_arrays)))
+        idxs = draw(st.lists(st.integers(0, n_arrays - 1),
+                             min_size=n_args, max_size=n_args, unique=True))
+        modes = [draw(st.sampled_from(["const", "inout", "out"]))
+                 for _ in idxs]
+        ops.append(list(zip(idxs, modes)))
+    return n_arrays, ops
+
+
+@settings(max_examples=200, deadline=None)
+@given(programs())
+def test_dependency_closure_matches_hazard_oracle(prog):
+    """The transitive closure of inferred edges must contain every
+    RAW/WAR/WAW hazard pair (correctness), and must never order two
+    hazard-free elements (maximality of parallelism for readers)."""
+    n_arrays, ops = prog
+    arrays = [FakeArray(f"a{i}") for i in range(n_arrays)]
+    dag = ComputationDAG()
+    elements = []
+    for spec in ops:
+        args = []
+        for idx, mode in spec:
+            args.append({"const": const, "inout": inout, "out": out}[mode](arrays[idx]))
+        e = ComputationalElement(fn=None, args=tuple(args))
+        dag.add(e)
+        elements.append((e, spec))
+
+    # transitive closure of the runtime DAG
+    order = {e.uid: i for i, (e, _) in enumerate(elements)}
+    reach = {e.uid: set() for e, _ in elements}
+    for e, _ in elements:
+        for p in e.parents:
+            reach[e.uid].add(p.uid)
+            reach[e.uid] |= reach[p.uid]
+
+    def hazard(spec_a, spec_b):
+        """True if b must be ordered after a (any RAW/WAR/WAW on a shared array)."""
+        for ia, ma in spec_a:
+            for ib, mb in spec_b:
+                if ia != ib:
+                    continue
+                wa = ma in ("inout", "out")
+                wb = mb in ("inout", "out")
+                if wa or wb:
+                    return True
+        return False
+
+    for i, (ea, sa) in enumerate(elements):
+        for j in range(i + 1, len(elements)):
+            eb, sb = elements[j]
+            if hazard(sa, sb):
+                assert ea.uid in reach[eb.uid], (
+                    f"missing hazard edge {ea.name}->{eb.name}")
+            # read-read sharing must stay unordered *unless* forced
+            # transitively through some other array's hazard chain — so no
+            # assertion on the converse; direct edges are checked below.
+
+    # No DIRECT edge between two hazard-free elements
+    for i, (ea, sa) in enumerate(elements):
+        for j in range(i + 1, len(elements)):
+            eb, sb = elements[j]
+            if ea in eb.parents:
+                assert hazard(sa, sb), "spurious direct edge between hazard-free elements"

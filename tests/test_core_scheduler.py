@@ -1,0 +1,253 @@
+"""Scheduler-level tests: real execution correctness, stream policies,
+host-sync granularity, serial-vs-parallel timing properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (GrScheduler, NewStreamPolicy, SimExecutor, SimHardware,
+                        const, inout, make_scheduler, out)
+
+
+# ----------------------------------------------------------------------
+# Real-executor correctness: async parallel execution == numpy semantics
+# ----------------------------------------------------------------------
+
+_OPS = {
+    "add": (jax.jit(lambda a, b: a + b), lambda a, b: a + b),
+    "mul": (jax.jit(lambda a, b: a * b), lambda a, b: a * b),
+    "axpy": (jax.jit(lambda a, b: 2.0 * a + b), lambda a, b: 2.0 * a + b),
+}
+
+
+@st.composite
+def random_program(draw):
+    n_arrays = draw(st.integers(2, 4))
+    n_ops = draw(st.integers(1, 10))
+    ops = []
+    for _ in range(n_ops):
+        opname = draw(st.sampled_from(sorted(_OPS)))
+        src_a = draw(st.integers(0, n_arrays - 1))
+        src_b = draw(st.integers(0, n_arrays - 1))
+        dst = draw(st.integers(0, n_arrays - 1))
+        ops.append((opname, src_a, src_b, dst))
+    return n_arrays, ops
+
+
+@settings(max_examples=25, deadline=None)
+@given(random_program())
+def test_parallel_execution_matches_sequential_semantics(prog):
+    n_arrays, ops = prog
+    rng = np.random.RandomState(0)
+    init = [rng.randn(32).astype(np.float32) for _ in range(n_arrays)]
+
+    # sequential numpy oracle
+    ref = [v.copy() for v in init]
+    for opname, a, b, d in ops:
+        ref[d] = _OPS[opname][1](ref[a], ref[b]).astype(np.float32)
+
+    sched = make_scheduler("parallel")
+    try:
+        arrs = [sched.array(v.copy(), name=f"a{i}") for i, v in enumerate(init)]
+        for opname, a, b, d in ops:
+            fn = _OPS[opname][0]
+            args = [const(arrs[a]), const(arrs[b]), out(arrs[d])]
+            sched.launch(jax.jit(lambda x, y, _o, f=_OPS[opname][1]: f(x, y)),
+                         [const(arrs[a]), const(arrs[b]), out(arrs[d])],
+                         name=opname)
+        for i, arr in enumerate(arrs):
+            np.testing.assert_allclose(np.asarray(arr), ref[i], rtol=1e-6,
+                                       err_msg=f"array {i}")
+    finally:
+        sched.shutdown()
+
+
+def test_serial_and_parallel_same_results():
+    def run(policy):
+        s = make_scheduler(policy)
+        try:
+            x = s.array(np.arange(64, dtype=np.float32), name="x")
+            y = s.array(np.zeros(64, np.float32), name="y")
+            z = s.array(np.zeros(64, np.float32), name="z")
+            s.launch(jax.jit(lambda a, _: a * a), [const(x), out(y)], name="sq")
+            s.launch(jax.jit(lambda a, _: a + 3), [const(x), out(z)], name="p3")
+            s.launch(jax.jit(lambda a, b: a + b), [const(y), inout(z)], name="mix")
+            return np.asarray(z).copy()
+        finally:
+            s.shutdown()
+
+    np.testing.assert_allclose(run("serial"), run("parallel"))
+
+
+# ----------------------------------------------------------------------
+# Stream-management policies (§IV-C)
+# ----------------------------------------------------------------------
+
+def test_first_child_inherits_parent_stream():
+    s = make_scheduler("parallel", simulate=True)
+    A = s.array(np.zeros(1024, np.float32), name="A")
+    B = s.array(np.zeros(1024, np.float32), name="B")
+    k1 = s.launch(None, [inout(A)], name="K1", cost_s=1e-3)
+    k2 = s.launch(None, [const(A), out(B)], name="K2", cost_s=1e-3)
+    assert k2.stream == k1.stream          # first child inherits
+    C = s.array(np.zeros(1024, np.float32), name="C")
+    k3 = s.launch(None, [const(A), out(C)], name="K3", cost_s=1e-3)
+    assert k3.stream != k1.stream          # second child gets another lane
+    s.sync()
+
+
+def test_independent_kernels_get_distinct_lanes():
+    s = make_scheduler("parallel", simulate=True)
+    es = []
+    for i in range(4):
+        X = s.array(np.zeros(1024, np.float32), name=f"X{i}")
+        es.append(s.launch(None, [inout(X)], name=f"K{i}", cost_s=1e-3))
+    assert len({e.stream for e in es}) == 4
+    s.sync()
+
+
+def test_fifo_lane_reuse_after_sync():
+    s = make_scheduler("parallel", simulate=True)
+    X = s.array(np.zeros(1024, np.float32), name="X")
+    s.launch(None, [inout(X)], name="K1", cost_s=1e-4)
+    s.sync()
+    lanes_before = s.streams.lanes_created
+    Y = s.array(np.zeros(1024, np.float32), name="Y")
+    s.launch(None, [inout(Y)], name="K2", cost_s=1e-4)
+    s.sync()
+    assert s.streams.lanes_created == lanes_before  # reused, not created
+
+
+def test_event_count_matches_cross_lane_parents():
+    s = make_scheduler("parallel", simulate=True)
+    A = s.array(np.zeros(1024, np.float32), name="A")
+    B = s.array(np.zeros(1024, np.float32), name="B")
+    C = s.array(np.zeros(1024, np.float32), name="C")
+    s.launch(None, [inout(A)], name="K1", cost_s=1e-3)
+    s.launch(None, [inout(B)], name="K2", cost_s=1e-3)
+    ev0 = s.streams.events_created
+    # K3 depends on both K1 and K2 -> at most one event (other parent's lane
+    # is inherited)
+    s.launch(None, [const(A), const(B), out(C)], name="K3", cost_s=1e-3)
+    assert s.streams.events_created - ev0 == 1
+    s.sync()
+
+
+# ----------------------------------------------------------------------
+# Host-access synchronization granularity (§IV-B)
+# ----------------------------------------------------------------------
+
+def test_host_read_syncs_only_owning_lane():
+    s = make_scheduler("parallel", simulate=True)
+    A = s.array(np.zeros(1 << 20, np.float32), name="A")
+    B = s.array(np.zeros(1024, np.float32), name="B")
+    s.launch(None, [inout(A)], name="slow", cost_s=1.0)
+    kb = s.launch(None, [inout(B)], name="fast", cost_s=1e-4)
+    _ = B[0]                       # host read of B: must NOT wait for `slow`
+    assert s.executor.host_time < 0.5, (
+        f"host read of B waited for unrelated slow kernel "
+        f"(host_time={s.executor.host_time})")
+    s.sync()
+    assert s.executor.host_time >= 1.0
+
+
+def test_host_write_waits_for_readers():
+    s = make_scheduler("parallel", simulate=True)
+    A = s.array(np.zeros(1024, np.float32), name="A")
+    B = s.array(np.zeros(1024, np.float32), name="B")
+    k = s.launch(None, [const(A), out(B)], name="reader", cost_s=0.25)
+    A[0] = 7.0                     # WAR: host write must wait for `reader`
+    assert s.executor.host_time >= 0.25
+    s.sync()
+
+
+def test_consecutive_host_accesses_fast_path():
+    s = make_scheduler("parallel", simulate=True)
+    A = s.array(np.zeros(1024, np.float32), name="A")
+    A[0] = 1.0
+    A[1] = 2.0
+    _ = A[0]
+    assert s.dag.num_elements == 0  # no DAG traffic for host-only accesses
+
+
+# ----------------------------------------------------------------------
+# Timing properties (simulated): parallel never slower than serial
+# ----------------------------------------------------------------------
+
+@st.composite
+def timed_program(draw):
+    n = draw(st.integers(2, 10))
+    ops = []
+    for i in range(n):
+        reads = draw(st.lists(st.integers(0, i - 1), max_size=2,
+                              unique=True)) if i > 0 else []
+        cost = draw(st.floats(1e-4, 5e-3))
+        mb = draw(st.integers(0, 8))
+        ops.append((reads, cost, mb * (1 << 20)))
+    return ops
+
+
+@settings(max_examples=40, deadline=None)
+@given(timed_program())
+def test_parallel_schedule_not_slower_than_serial(ops):
+    def build(policy):
+        s = make_scheduler(policy, simulate=True)
+        outs = []
+        for i, (reads, cost, nbytes) in enumerate(ops):
+            y = s.array(np.zeros(max(1, nbytes // 4), np.float32), name=f"y{i}")
+            args = [const(outs[r]) for r in reads] + [out(y)]
+            s.launch(None, args, name=f"k{i}", cost_s=cost)
+            outs.append(y)
+        s.sync()
+        return s.timeline.makespan
+
+    ts = build("serial")
+    tp = build("parallel")
+    assert tp <= ts * 1.001 + 1e-4, f"parallel {tp} slower than serial {ts}"
+
+
+def test_oracle_not_slower_than_runtime_scheduler():
+    def build(**kw):
+        s = make_scheduler("parallel", simulate=True, **kw)
+        prev = None
+        for i in range(8):
+            y = s.array(np.zeros(1 << 20, np.float32), name=f"y{i}")
+            args = ([const(prev)] if prev is not None and i % 3 == 0 else []) + [out(y)]
+            s.launch(None, args, name=f"k{i}", cost_s=1e-3)
+            prev = y
+        s.sync()
+        return s.timeline.makespan
+
+    t_runtime = build()
+    t_oracle = build(oracle=True)
+    assert t_oracle <= t_runtime * 1.001 + 1e-6
+
+
+# ----------------------------------------------------------------------
+# History / straggler detection
+# ----------------------------------------------------------------------
+
+def test_history_and_straggler_detection():
+    from repro.core import KernelHistory
+    h = KernelHistory(straggler_factor=3.0, min_samples=3)
+    for _ in range(5):
+        assert not h.record("k", {"block": 128}, 1.0)
+    assert h.record("k", {"block": 128}, 10.0)       # straggler
+    assert h.estimate("k", {"block": 128}) == pytest.approx(1.0)
+    h.record("k", {"block": 32}, 0.5)
+    assert h.best_config("k") == {"block": "32"}
+
+
+def test_overlap_metrics_bounds():
+    s = make_scheduler("parallel", simulate=True)
+    for i in range(5):
+        X = s.array(np.zeros(2 << 20, np.float32), name=f"X{i}")
+        Y = s.array(np.zeros(2 << 20, np.float32), name=f"Y{i}")
+        s.launch(None, [const(X), out(Y)], name=f"K{i}", cost_s=2e-3)
+    s.sync()
+    m = s.timeline.overlap_metrics()
+    for k, v in m.items():
+        assert 0.0 <= v <= 1.0, (k, v)
+    assert m["TOT"] > 0  # something overlapped

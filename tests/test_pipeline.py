@@ -1,0 +1,88 @@
+"""Pipeline parallelism (GPipe over the pod axis): correctness vs the
+sequential reference, forward and backward."""
+import os
+import subprocess
+import sys
+import textwrap
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_sub(code: str) -> str:
+    prog = ("import os\n"
+            "os.environ['XLA_FLAGS'] = "
+            "'--xla_force_host_platform_device_count=8'\n"
+            + textwrap.dedent(code))
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                         text=True, env=env, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_pipeline_forward_matches_sequential():
+    out = run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.runtime.pipeline import pipeline_apply
+
+        mesh = jax.make_mesh((4, 2), ("pod", "data"))
+        S, L_per, d = 4, 2, 16         # 4 stages x 2 layers
+        rng = np.random.RandomState(0)
+        Ws = jnp.asarray(rng.randn(S, L_per, d, d).astype(np.float32) * 0.3)
+
+        def stage_fn(Wstage, x):
+            for i in range(L_per):
+                x = jnp.tanh(x @ Wstage[i])
+            return x
+
+        n_micro, mb = 6, 8
+        xs = jnp.asarray(rng.randn(n_micro, mb, d).astype(np.float32))
+
+        fwd = jax.jit(pipeline_apply(stage_fn, mesh, axis="pod"))
+        got = fwd(Ws, xs)
+
+        ref = xs
+        for s in range(S):
+            ref = jax.vmap(lambda x: stage_fn(Ws[s], x))(ref)
+        err = float(jnp.max(jnp.abs(got - ref)))
+        assert err < 1e-5, err
+        print("fwd OK", err)
+    """)
+    assert "fwd OK" in out
+
+
+def test_pipeline_backward_matches_sequential():
+    out = run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.runtime.pipeline import pipeline_loss_fn
+
+        mesh = jax.make_mesh((2, 4), ("pod", "data"))
+        S, L_per, d = 2, 2, 8
+        rng = np.random.RandomState(1)
+        Ws = jnp.asarray(rng.randn(S, L_per, d, d).astype(np.float32) * 0.3)
+        xs = jnp.asarray(rng.randn(4, 4, d).astype(np.float32))
+        ys = jnp.asarray(rng.randn(4, 4, d).astype(np.float32))
+
+        def stage_fn(Wstage, x):
+            for i in range(L_per):
+                x = jnp.tanh(x @ Wstage[i])
+            return x
+
+        def loss_tail(outs, ys):
+            return jnp.mean((outs - ys) ** 2)
+
+        loss = pipeline_loss_fn(stage_fn, loss_tail, mesh, axis="pod")
+        g_pipe = jax.jit(jax.grad(loss))(Ws, xs, ys)
+
+        def ref_loss(Ws):
+            out = xs
+            for s in range(S):
+                out = jax.vmap(lambda x: stage_fn(Ws[s], x))(out)
+            return jnp.mean((out - ys) ** 2)
+
+        g_ref = jax.grad(ref_loss)(Ws)
+        err = float(jnp.max(jnp.abs(g_pipe - g_ref)))
+        assert err < 1e-5, err
+        print("bwd OK", err)
+    """)
+    assert "bwd OK" in out

@@ -1,0 +1,44 @@
+"""Beyond-paper scheduler extensions: launch-config autotuning (the paper's
+§VI future work) and Chrome-trace timeline export."""
+import json
+import os
+import tempfile
+
+import numpy as np
+
+from repro.core import const, make_scheduler, out
+
+
+def test_autotune_explores_then_exploits_best_config():
+    costs = {32: 3e-3, 64: 1e-3, 128: 2e-3}
+    s = make_scheduler("parallel", simulate=True)
+    choices = []
+    for i in range(30):
+        x = s.array(np.zeros(1024, np.float32), name=f"a{i}")
+        y = s.array(np.zeros(1024, np.float32), name=f"b{i}")
+        cfg = s._tune("k", {"block": [32, 64, 128]})
+        choices.append(cfg["block"])
+        s.launch(None, [const(x), out(y)], name="k",
+                 cost_s=costs[cfg["block"]], block=cfg["block"])
+        s.sync()
+    assert set(choices[:6]) == {32, 64, 128}      # exploration round-robin
+    assert all(c == 64 for c in choices[8:])      # locks in the fastest
+
+
+def test_chrome_trace_export():
+    s = make_scheduler("parallel", simulate=True)
+    for i in range(4):
+        x = s.array(np.zeros(1 << 20, np.float32), name=f"x{i}")
+        y = s.array(np.zeros(1 << 20, np.float32), name=f"y{i}")
+        s.launch(None, [const(x), out(y)], name=f"k{i}", cost_s=1e-3)
+    s.sync()
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "trace.json")
+        s.timeline.to_chrome_trace(path)
+        tr = json.load(open(path))
+        ev = tr["traceEvents"]
+        assert any(e.get("cat") == "h2d" for e in ev)
+        assert any(e.get("cat") == "compute" for e in ev)
+        # complete events have positive durations and microsecond stamps
+        xs = [e for e in ev if e["ph"] == "X"]
+        assert xs and all(e["dur"] > 0 for e in xs)
