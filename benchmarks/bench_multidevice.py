@@ -1,0 +1,58 @@
+"""Multi-device scaling + placement-policy benchmark (simulated).
+
+Two questions, two tables:
+
+* **speedup** — makespan of the task-parallel scenario (independent kernel
+  chains) on 1/2/4 simulated devices.  With full-occupancy kernels a single
+  device serializes everything; N devices should approach N×.
+* **placement** — D2D transfer counts and makespan of the locality-heavy
+  scenario under round-robin vs min-load vs data-affinity placement on 2
+  devices.  Affinity should insert (near) zero D2D copies.
+"""
+from __future__ import annotations
+
+from repro.benchsuite.multidevice import (build_locality_heavy,
+                                          build_task_parallel)
+from repro.core import make_scheduler
+
+from .common import emit
+
+BRANCHES = 4
+CHAIN = 4
+
+
+def run_task_parallel(num_devices: int, placement: str = "affinity"):
+    s = make_scheduler("parallel", simulate=True, num_devices=num_devices,
+                       placement=placement)
+    build_task_parallel(s, branches=BRANCHES, chain=CHAIN)
+    s.sync()
+    return s.timeline.makespan, s.stats()
+
+
+def run_locality(num_devices: int, placement: str):
+    s = make_scheduler("parallel", simulate=True, num_devices=num_devices,
+                       placement=placement)
+    build_locality_heavy(s, groups=BRANCHES)
+    s.sync()
+    return s.timeline.makespan, s.stats()
+
+
+def main() -> list:
+    rows = []
+    t1, _ = run_task_parallel(1)
+    for nd in (1, 2, 4):
+        t, st = run_task_parallel(nd)
+        rows.append((f"multidev/speedup/{nd}dev", t * 1e6,
+                     f"speedup_vs_1dev={t1 / t:.3f} "
+                     f"d2d={st['d2d_transfers']}"))
+    for pl in ("round-robin", "min-load", "affinity"):
+        t, st = run_locality(2, pl)
+        rows.append((f"multidev/placement/{pl}", t * 1e6,
+                     f"d2d={st['d2d_transfers']} "
+                     f"lanes={st['lanes_created']}"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

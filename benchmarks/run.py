@@ -11,8 +11,8 @@ import traceback
 
 def main() -> None:
     from . import (bench_contention, bench_hwmetrics, bench_memory,
-                   bench_oracle, bench_overlap, bench_roofline,
-                   bench_speedup)
+                   bench_multidevice, bench_oracle, bench_overlap,
+                   bench_roofline, bench_speedup)
 
     suites = [
         ("Fig.7 speedup-vs-serial", bench_speedup),
@@ -22,6 +22,7 @@ def main() -> None:
         ("Fig.12 hw-metrics", bench_hwmetrics),
         ("Table.I memory", bench_memory),
         ("Roofline (dry-run)", bench_roofline),
+        ("Multi-device scaling", bench_multidevice),
     ]
     failed = []
     for title, mod in suites:

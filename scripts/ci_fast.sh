@@ -1,0 +1,7 @@
+#!/usr/bin/env bash
+# Fast tier-1 test run, exactly as CI executes it: fully offline, no
+# network, no hypothesis required, slow integration tests excluded.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -q -m "not slow" "$@"

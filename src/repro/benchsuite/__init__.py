@@ -1,7 +1,9 @@
-"""The paper's benchmark suite (§V-B): 6 task-parallel GPU workloads."""
+"""The paper's benchmark suite (§V-B): 6 task-parallel GPU workloads, plus
+multi-device scheduling scenarios (multidevice.py)."""
 from .costmodel import GPUS, GPUSpec, GTX960, GTX1660S, P100, kernel_cost, occupancy
 from .suite import BENCHMARKS, Benchmark, BS, DL, HITS, IMG, ML, VEC
+from .multidevice import build_locality_heavy, build_task_parallel
 
 __all__ = ["BENCHMARKS", "Benchmark", "VEC", "BS", "IMG", "ML", "HITS", "DL",
            "GPUS", "GPUSpec", "P100", "GTX1660S", "GTX960", "kernel_cost",
-           "occupancy"]
+           "occupancy", "build_task_parallel", "build_locality_heavy"]

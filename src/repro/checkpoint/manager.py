@@ -49,7 +49,9 @@ class CheckpointManager:
         os.makedirs(directory, exist_ok=True)
 
     # ------------------------------------------------------------------
-    def save(self, step: int, state: Any) -> None:
+    def save(self, step: int, state: Any, extra: Optional[dict] = None) -> None:
+        """Persist ``state`` (and JSON-serializable ``extra`` metadata — RNG
+        seeds, data-stream position, anything else exact resume consumes)."""
         # 1. consistent host snapshot (D2H) — synchronous
         leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(state)
         snapshot = [(_path_str(p), np.asarray(v)) for p, v in leaves_with_paths]
@@ -67,7 +69,8 @@ class CheckpointManager:
                 manifest[name] = {"file": fn, "dtype": str(arr.dtype),
                                   "shape": list(arr.shape)}
             with open(os.path.join(tmp, "manifest.json"), "w") as f:
-                json.dump({"step": step, "leaves": manifest}, f)
+                json.dump({"step": step, "leaves": manifest,
+                           "extra": extra or {}}, f)
             shutil.rmtree(final, ignore_errors=True)
             os.rename(tmp, final)            # atomic publish
             self._gc()
@@ -85,6 +88,12 @@ class CheckpointManager:
 
     # ------------------------------------------------------------------
     def latest_step(self) -> Optional[int]:
+        # Exact-resume correctness: an async save still in flight must be
+        # visible to the caller deciding which step to resume from.  Without
+        # this wait, latest_step() could answer N while restore() (which
+        # waits internally) restores N+k — a resumed run that silently
+        # re-trains steps with a future state (the ~1e-3 loss drift bug).
+        self.wait()
         steps = []
         for d in os.listdir(self.dir):
             m = _STEP_RE.match(d)
@@ -93,7 +102,12 @@ class CheckpointManager:
         return max(steps) if steps else None
 
     def restore(self, like: Any, step: Optional[int] = None) -> Any:
-        """Restore into the structure (and shardings) of ``like``."""
+        """Restore into the structure (and shardings) of ``like``.
+
+        Callers resuming training should pin ``step`` to the value they got
+        from :meth:`latest_step` so the loop counter and the restored state
+        can never disagree (see :meth:`restore_latest`).
+        """
         self.wait()
         if step is None:
             step = self.latest_step()
@@ -112,6 +126,33 @@ class CheckpointManager:
                 if hasattr(ref, "sharding") else arr
             out.append(val)
         return jax.tree_util.tree_unflatten(treedef, out)
+
+    def restore_latest(self, like: Any):
+        """Atomically resolve (step, state, extra) for exact resume.
+
+        Returns ``(None, like, {})`` when no checkpoint exists.  The returned
+        step is the one actually restored — callers must resume the loop from
+        it rather than re-deriving it with a second ``latest_step()`` call.
+        """
+        step = self.latest_step()
+        if step is None:
+            return None, like, {}
+        return step, self.restore(like, step=step), self._read_extra(step)
+
+    def load_extra(self, step: Optional[int] = None) -> dict:
+        """The ``extra`` metadata dict saved alongside ``step`` (``{}`` for
+        checkpoints written before this field existed)."""
+        self.wait()
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        return self._read_extra(step)
+
+    def _read_extra(self, step: int) -> dict:
+        with open(os.path.join(self.dir, f"step_{step}",
+                               "manifest.json")) as f:
+            return json.load(f).get("extra", {})
 
     def _gc(self) -> None:
         steps = []

@@ -2,7 +2,9 @@
 from .element import (AccessMode, Arg, ComputationalElement, ElementKind,
                       const, inout, kernel, out)
 from .dag import ComputationDAG
-from .streams import NewStreamPolicy, ParentStreamPolicy, StreamManager
+from .streams import (DataAffinityPlacement, Lane, MinLoadPlacement,
+                      NewStreamPolicy, ParentStreamPolicy, PlacementPolicy,
+                      PLACEMENT_POLICIES, RoundRobinPlacement, StreamManager)
 from .managed import ManagedArray
 from .timeline import Timeline, Span
 from .history import KernelHistory
@@ -14,6 +16,8 @@ __all__ = [
     "AccessMode", "Arg", "ComputationalElement", "ElementKind",
     "const", "inout", "kernel", "out",
     "ComputationDAG", "NewStreamPolicy", "ParentStreamPolicy", "StreamManager",
+    "Lane", "PlacementPolicy", "PLACEMENT_POLICIES", "RoundRobinPlacement",
+    "MinLoadPlacement", "DataAffinityPlacement",
     "ManagedArray", "Timeline", "Span", "KernelHistory",
     "Executor", "SimExecutor", "SimHardware", "ThreadLaneExecutor",
     "GrScheduler", "make_scheduler",

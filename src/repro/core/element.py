@@ -59,6 +59,7 @@ class ElementKind(enum.Enum):
     KERNEL = "kernel"            # device computation
     HOST_ACCESS = "host_access"  # CPU read/write of a managed array (§IV-A)
     TRANSFER = "transfer"        # H2D prefetch / D2H copy (scheduled by runtime)
+    D2D = "d2d"                  # device-to-device copy (multi-device runtime)
     LIBRARY = "library"          # pre-registered library call (§IV-A)
     SYNC = "sync"                # explicit barrier requested by the host
 
@@ -87,6 +88,8 @@ class ComputationalElement:
     # -- filled in by the scheduler --
     uid: int = field(default_factory=lambda: next(_ELEMENT_IDS))
     stream: Optional[int] = None       # lane id assigned by the StreamManager
+    device: Optional[int] = None       # device chosen by the placement policy
+    src_device: Optional[int] = None   # D2D only: device the copy reads from
     parents: list = field(default_factory=list)    # list[ComputationalElement]
     children: list = field(default_factory=list)
     # dependency set: argument keys that can still introduce dependencies

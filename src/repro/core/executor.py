@@ -68,18 +68,33 @@ class Executor:
 # Real execution: threads as lanes, JAX async dispatch underneath
 # ======================================================================
 
-def _run_device_element(e: ComputationalElement):
-    """Execute a kernel/transfer element against its ManagedArray args."""
+def _run_device_element(e: ComputationalElement, jdev=None):
+    """Execute a kernel/transfer element against its ManagedArray args.
+
+    ``jdev`` is the JAX device the element's lane is pinned to (None when a
+    single device is visible — the pre-multi-device behaviour)."""
     import jax
 
     if e.kind is ElementKind.TRANSFER:
         ma = e.args[0].array
-        val = jax.device_put(np.asarray(ma.host))
+        val = jax.device_put(np.asarray(ma.host), jdev)
         val.block_until_ready()
         ma.set_physical_device(val)
         return
 
+    if e.kind is ElementKind.D2D:
+        ma = e.args[0].array
+        val = jax.device_put(ma.device_value(), jdev)
+        if hasattr(val, "block_until_ready"):
+            val.block_until_ready()
+        ma.set_physical_device(val)
+        return
+
     inputs = [a.array.device_value() for a in e.args]
+    if jdev is not None:
+        # Commit every input to the lane's device so XLA runs the kernel
+        # there (device_put is a no-op for values already resident).
+        inputs = [jax.device_put(x, jdev) for x in inputs]
     result = e.fn(*inputs)
     writable = [a.array for a in e.args if a.mode.writes]
     if writable:
@@ -114,10 +129,12 @@ class _LaneWorker(threading.Thread):
                 for p in waits:
                     p.done_event.wait()
                 t0 = self.executor.host_now()
-                _run_device_element(element)
+                _run_device_element(element,
+                                    self.executor.jax_device_for(element))
                 t1 = self.executor.host_now()
                 element.t_start, element.t_end = t0, t1
                 kind = ("h2d" if element.kind is ElementKind.TRANSFER
+                        else "d2d" if element.kind is ElementKind.D2D
                         else "compute")
                 self.executor.timeline.record(
                     element.uid, element.name, kind, self.lane_id, t0, t1)
@@ -132,12 +149,27 @@ class _LaneWorker(threading.Thread):
 
 
 class ThreadLaneExecutor(Executor):
-    def __init__(self) -> None:
+    def __init__(self, num_devices: int = 1) -> None:
         self.timeline = Timeline()
         self.history = KernelHistory()
+        self.num_devices = max(1, num_devices)
+        self._jax_devices = None           # resolved lazily (jax.devices())
         self._lanes: Dict[int, _LaneWorker] = {}
         self._submitted: List[ComputationalElement] = []
         self._epoch = time.perf_counter()
+
+    def jax_device_for(self, element: ComputationalElement):
+        """JAX device backing the element's lane; None when single-device
+        (scheduling still works, D2D copies degrade to no-ops)."""
+        if self.num_devices <= 1:
+            return None
+        if self._jax_devices is None:
+            import jax
+            self._jax_devices = jax.devices()
+        if len(self._jax_devices) <= 1:
+            return None
+        dev = element.device if element.device is not None else 0
+        return self._jax_devices[dev % len(self._jax_devices)]
 
     def host_now(self) -> float:
         return time.perf_counter() - self._epoch
@@ -202,17 +234,24 @@ class SimHardware:
     d2h_gbps: float = 12.0
     default_parallel_fraction: float = 0.75
     launch_overhead_s: float = 5e-6
+    # Multi-device: N identical devices, each with unit compute capacity and
+    # its own H2D/D2H copy engines; device pairs are connected by a
+    # point-to-point link (NVLink / PCIe P2P analogue) used by D2D elements.
+    num_devices: int = 1
+    d2d_gbps: float = 50.0
 
 
 @dataclass
 class _SimTask:
     element: ComputationalElement
-    kind: str                   # compute | h2d | d2h
+    kind: str                   # compute | h2d | d2h | d2d
     work: float                 # seconds (compute) or bytes (transfer)
     remaining: float
     pf: float
     lane: int
     issue_t: float
+    device: int = 0             # executing device (D2D: destination)
+    src_device: int = 0         # D2D only: device the copy reads from
     rate: float = 0.0
     t_start: float = float("nan")
 
@@ -244,6 +283,9 @@ class SimExecutor(Executor):
         if element.kind is ElementKind.TRANSFER:
             kind = "h2d"
             work = float(element.transfer_bytes)
+        elif element.kind is ElementKind.D2D:
+            kind = "d2d"
+            work = float(element.transfer_bytes)
         else:
             kind = "compute"
             est = element.cost_s
@@ -253,8 +295,13 @@ class SimExecutor(Executor):
             work = float(est)
         pf = float(element.config.get(
             "parallel_fraction", self.hw.default_parallel_fraction))
+        # The hardware model is authoritative: a schedule that names more
+        # devices than the hw has folds onto the last physical device.
+        top = max(0, self.hw.num_devices - 1)
         task = _SimTask(element=element, kind=kind, work=work, remaining=work,
-                        pf=pf, lane=lane_id, issue_t=self.host_time)
+                        pf=pf, lane=lane_id, issue_t=self.host_time,
+                        device=min(element.device or 0, top),
+                        src_device=min(element.src_device or 0, top))
         self._pending.append(task)
         self._lane_q.setdefault(lane_id, []).append(element.uid)
         self._try_start()
@@ -282,10 +329,13 @@ class SimExecutor(Executor):
         self._recompute_rates()
 
     def _recompute_rates(self) -> None:
-        comp = [t for t in self._running if t.kind == "compute"]
-        # Water-fill device occupancy 1.0 across kernels; each kernel holds
-        # allocation a<=pf and progresses at a/pf (its solo rate is 1.0).
-        if comp:
+        # Water-fill each device's unit capacity across its kernels; a kernel
+        # holds allocation a<=pf and progresses at a/pf (its solo rate is 1.0).
+        by_dev: Dict[int, List[_SimTask]] = {}
+        for t in self._running:
+            if t.kind == "compute":
+                by_dev.setdefault(t.device, []).append(t)
+        for comp in by_dev.values():
             remaining = 1.0
             todo = sorted(comp, key=lambda t: t.pf)
             n = len(todo)
@@ -294,13 +344,26 @@ class SimExecutor(Executor):
                 t.rate = (a / t.pf) if t.pf > 0 else 1.0
                 remaining -= a
                 n -= 1
-        # One DMA engine per direction, FIFO at full bandwidth.
+        # One DMA engine per direction *per device*, FIFO at full bandwidth.
         for direction, bw in (("h2d", self.hw.h2d_gbps),
                               ("d2h", self.hw.d2h_gbps)):
-            xs = [t for t in self._running if t.kind == direction]
+            engines: Dict[int, List[_SimTask]] = {}
+            for t in self._running:
+                if t.kind == direction:
+                    engines.setdefault(t.device, []).append(t)
+            for xs in engines.values():
+                xs.sort(key=lambda t: (t.t_start, t.element.uid))
+                for i, t in enumerate(xs):
+                    t.rate = bw * 1e9 if i == 0 else 0.0
+        # One point-to-point link per ordered (src, dst) device pair.
+        links: Dict[tuple, List[_SimTask]] = {}
+        for t in self._running:
+            if t.kind == "d2d":
+                links.setdefault((t.src_device, t.device), []).append(t)
+        for xs in links.values():
             xs.sort(key=lambda t: (t.t_start, t.element.uid))
             for i, t in enumerate(xs):
-                t.rate = bw * 1e9 if i == 0 else 0.0
+                t.rate = self.hw.d2d_gbps * 1e9 if i == 0 else 0.0
 
     # -- event loop ------------------------------------------------------
     def _advance_to(self, target: float) -> None:

@@ -36,6 +36,9 @@ class ManagedArray:
         self.device: Any = None            # jax.Array once transferred
         self.host_valid = True
         self.device_valid = False
+        # Which device owns the current device copy (single-copy model: a
+        # cross-device consumer triggers a D2D element that moves ownership).
+        self.device_id: Optional[int] = None
         self.aid = next(_ARRAY_IDS)
         self.name = name or f"arr{self.aid}"
 
@@ -109,6 +112,7 @@ class ManagedValue:
         self.host = None
         self.host_valid = False
         self.device_valid = value is not None
+        self.device_id: Optional[int] = 0 if value is not None else None
         self.aid = next(_ARRAY_IDS)
         self.name = name or f"val{self.aid}"
 

@@ -38,17 +38,24 @@ class GrScheduler:
                  parent_stream_policy: ParentStreamPolicy = ParentStreamPolicy.FIRST_CHILD_INHERITS,
                  auto_prefetch: bool = True,
                  launch_overhead_s: Optional[float] = None,
-                 max_lanes: Optional[int] = None) -> None:
+                 max_lanes: Optional[int] = None,
+                 num_devices: int = 1,
+                 placement: str = "round-robin") -> None:
         assert policy in ("serial", "parallel")
         self.policy = policy
-        self.executor = executor or ThreadLaneExecutor()
+        self.num_devices = max(1, num_devices)
+        self.executor = executor or ThreadLaneExecutor(
+            num_devices=self.num_devices)
         self.dag = ComputationDAG()
         self.streams = StreamManager(new_stream_policy, parent_stream_policy,
-                                     max_lanes=max_lanes)
+                                     max_lanes=max_lanes,
+                                     num_devices=self.num_devices,
+                                     placement=placement)
         self.auto_prefetch = auto_prefetch
         if launch_overhead_s is None:
             launch_overhead_s = 5e-6 if policy == "parallel" else 1e-6
         self.launch_overhead_s = launch_overhead_s
+        self.d2d_transfers = 0
         self._elements: List[ComputationalElement] = []
         self._tune_counts: dict = {}
 
@@ -75,7 +82,7 @@ class GrScheduler:
         self.executor.submit(e, lane.lane_id, events)
         self._elements.append(e)
 
-    def _prefetch_args(self, args: Sequence[Arg]) -> None:
+    def _prefetch_args(self, args: Sequence[Arg], device: int = 0) -> None:
         """Insert asynchronous H2D transfers for host-resident read args."""
         for a in args:
             ma = a.array
@@ -83,12 +90,37 @@ class GrScheduler:
                 t = ComputationalElement(
                     fn=None, args=(inout(ma),), kind=ElementKind.TRANSFER,
                     name=f"h2d_{ma.name}", transfer_bytes=ma.nbytes)
+                t.device = device
                 if self.policy == "parallel":
                     self._schedule(t)
                 else:
                     self._run_serial(t)
                 # Logical location update at schedule time (see managed.py).
                 ma.device_valid = True
+                ma.device_id = device
+
+    def _insert_d2d(self, args: Sequence[Arg], device: int) -> None:
+        """Move device-resident read args owned by *other* devices onto
+        ``device`` via D2D transfer elements (single-copy ownership model:
+        the copy migrates, it is not replicated)."""
+        for a in args:
+            ma = a.array
+            if not a.mode.reads or not getattr(ma, "device_valid", False):
+                continue
+            src = getattr(ma, "device_id", None)
+            if src is None:
+                ma.device_id = device      # claim unowned device copies
+                continue
+            if src == device:
+                continue
+            t = ComputationalElement(
+                fn=None, args=(inout(ma),), kind=ElementKind.D2D,
+                name=f"d2d_{ma.name}", transfer_bytes=getattr(ma, "nbytes", 0))
+            t.device = device
+            t.src_device = src
+            self._schedule(t)
+            ma.device_id = device
+            self.d2d_transfers += 1
 
     # ------------------------------------------------------------------
     def launch(self, fn: Optional[Callable], args: Sequence[Arg], *,
@@ -105,21 +137,30 @@ class GrScheduler:
         """
         if tune:
             config = dict(config, **self._tune(name, tune))
-        if self.auto_prefetch:
-            self._prefetch_args(args)
         e = ComputationalElement(fn=fn, args=tuple(args),
                                  kind=ElementKind.KERNEL, name=name,
                                  config=config, cost_s=cost_s)
         if self.policy == "parallel":
+            # Placement first: prefetches land on the consuming device and
+            # cross-device inputs get D2D copies before the kernel is added.
+            e.device = self.streams.place(e, self.executor.is_done)
+            if self.auto_prefetch:
+                self._prefetch_args(e.args, e.device)
+            if self.num_devices > 1:
+                self._insert_d2d(e.args, e.device)
             self._schedule(e)
         else:
+            if self.auto_prefetch:
+                self._prefetch_args(e.args)
             self._run_serial(e)
         # Logical location update at schedule time: the kernel's writable
         # outputs will live on device; host copies become stale.
+        dev = e.device if e.device is not None else 0
         for a in e.args:
             if a.mode.writes:
                 a.array.device_valid = True
                 a.array.host_valid = False
+                a.array.device_id = dev
         return e
 
     def _tune(self, name: str, tune: dict) -> dict:
@@ -208,6 +249,10 @@ class GrScheduler:
         self.dag.retire_all()
         for e in self._elements:
             self.streams.release(e)
+        # Retired elements can never need another release; keeping them made
+        # every later sync re-walk (and re-release) the whole history —
+        # unbounded memory and O(n^2) cost in long-running serving loops.
+        self._elements.clear()
 
     @property
     def timeline(self) -> Timeline:
@@ -217,6 +262,7 @@ class GrScheduler:
         return {"policy": self.policy,
                 "elements": self.dag.num_elements,
                 "edges": self.dag.num_edges,
+                "d2d_transfers": self.d2d_transfers,
                 **self.streams.stats(),
                 **self.executor.history.stats()}
 
@@ -227,12 +273,28 @@ class GrScheduler:
 # ----------------------------------------------------------------------
 def make_scheduler(policy: str = "parallel", *, simulate: bool = False,
                    hw: Optional[SimHardware] = None,
-                   oracle: bool = False, **kw) -> GrScheduler:
+                   oracle: bool = False, num_devices: int = 1,
+                   placement: str = "round-robin", **kw) -> GrScheduler:
     """Factory: real vs simulated executor; ``oracle=True`` emulates the
     hand-optimized CUDA-Graphs baseline of §V-D (full DAG known in advance →
-    zero runtime scheduling overhead, unlimited dedicated streams)."""
-    ex = SimExecutor(hw) if simulate else ThreadLaneExecutor()
+    zero runtime scheduling overhead, unlimited dedicated streams).
+
+    ``num_devices=N`` enables the multi-device runtime: the ``placement``
+    policy ("round-robin" / "min-load" / "affinity") spreads kernels across
+    devices and the scheduler inserts D2D copies for cross-device inputs.
+    """
+    num_devices = max(1, num_devices)
+    if simulate:
+        if hw is None:
+            hw = SimHardware(num_devices=num_devices)
+        elif hw.num_devices < num_devices:
+            from dataclasses import replace
+            hw = replace(hw, num_devices=num_devices)
+        ex: Executor = SimExecutor(hw)
+    else:
+        ex = ThreadLaneExecutor(num_devices=num_devices)
     if oracle:
         kw.setdefault("new_stream_policy", NewStreamPolicy.ALWAYS_NEW)
         kw.setdefault("launch_overhead_s", 0.0)
-    return GrScheduler(policy=policy, executor=ex, **kw)
+    return GrScheduler(policy=policy, executor=ex, num_devices=num_devices,
+                       placement=placement, **kw)

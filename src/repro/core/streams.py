@@ -1,4 +1,4 @@
-"""Stream (execution-lane) management (paper §IV-C).
+"""Stream (execution-lane) management (paper §IV-C) + device placement.
 
 CUDA streams map to GrJAX *lanes*: ordered dispatch queues that serialize the
 elements assigned to them while different lanes proceed independently.  On a
@@ -14,13 +14,20 @@ real TPU deployment a lane is a per-device async dispatch queue or a submesh
 * the manager tracks which computations are in flight on each lane and which
   managed arrays each lane currently *owns*, so a host access synchronizes
   only the lanes operating on that data (§IV-B).
+
+Multi-device extension: every lane is pinned to one ``device_id`` and a
+pluggable :class:`PlacementPolicy` picks the device for each new element
+*before* lane assignment.  Lane reuse, first-child inheritance and event
+insertion then all happen within the chosen device; the scheduler inserts
+``D2D`` transfer elements when an input's owning device disagrees with the
+placement (see scheduler.py).
 """
 from __future__ import annotations
 
 import enum
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Set, Tuple
+from typing import Callable, Dict, List, Optional, Set, Tuple, Union
 
 from .element import ComputationalElement
 
@@ -42,6 +49,7 @@ class ParentStreamPolicy(enum.Enum):
 @dataclass
 class Lane:
     lane_id: int
+    device_id: int = 0
     in_flight: List[ComputationalElement] = field(default_factory=list)
     last: Optional[ComputationalElement] = None   # tail of the lane's queue
 
@@ -49,46 +57,154 @@ class Lane:
         self.in_flight = [e for e in self.in_flight if not is_done(e)]
         return len(self.in_flight)
 
+    def load(self, is_done) -> float:
+        """Cost-weighted outstanding work (used by min-load placement)."""
+        self.pending(is_done)
+        return sum(max(e.cost_s, 1e-6) for e in self.in_flight)
 
+
+# ======================================================================
+# Device placement policies
+# ======================================================================
+
+class PlacementPolicy:
+    """Picks the device for an element before lane assignment."""
+
+    name = "base"
+
+    def choose(self, element: ComputationalElement, manager: "StreamManager",
+               is_done) -> int:
+        raise NotImplementedError
+
+
+class RoundRobinPlacement(PlacementPolicy):
+    """Cycle devices per launch — maximal spreading, ignores data location."""
+
+    name = "round-robin"
+
+    def __init__(self) -> None:
+        self._next = 0
+
+    def choose(self, element, manager, is_done) -> int:
+        d = self._next % manager.num_devices
+        self._next += 1
+        return d
+
+
+class MinLoadPlacement(PlacementPolicy):
+    """Least outstanding (cost-weighted) work across each device's lanes."""
+
+    name = "min-load"
+
+    def choose(self, element, manager, is_done) -> int:
+        return min(range(manager.num_devices),
+                   key=lambda d: (manager.device_load(d, is_done), d))
+
+
+class DataAffinityPlacement(PlacementPolicy):
+    """Device that already owns the most input bytes; falls back to min-load
+    for elements with no device-resident inputs.  Minimizes D2D traffic on
+    locality-heavy DAGs."""
+
+    name = "affinity"
+
+    def __init__(self) -> None:
+        self._fallback = MinLoadPlacement()
+
+    def choose(self, element, manager, is_done) -> int:
+        bytes_on: Dict[int, int] = {}
+        for a in element.args:
+            ma = a.array
+            dev = getattr(ma, "device_id", None)
+            if (a.mode.reads and getattr(ma, "device_valid", False)
+                    and dev is not None and dev < manager.num_devices):
+                bytes_on[dev] = bytes_on.get(dev, 0) + getattr(ma, "nbytes", 0)
+        if bytes_on:
+            return max(sorted(bytes_on), key=lambda d: bytes_on[d])
+        return self._fallback.choose(element, manager, is_done)
+
+
+PLACEMENT_POLICIES = {p.name: p for p in
+                      (RoundRobinPlacement, MinLoadPlacement,
+                       DataAffinityPlacement)}
+
+
+def make_placement(policy: Union[str, PlacementPolicy, None]
+                   ) -> PlacementPolicy:
+    if policy is None:
+        return RoundRobinPlacement()
+    if isinstance(policy, PlacementPolicy):
+        return policy
+    try:
+        return PLACEMENT_POLICIES[policy]()
+    except KeyError:
+        raise ValueError(f"unknown placement policy {policy!r}; "
+                         f"choose from {sorted(PLACEMENT_POLICIES)}")
+
+
+# ======================================================================
 class StreamManager:
-    """Assigns computational elements to lanes and decides event insertion."""
+    """Assigns computational elements to (device, lane) and decides event
+    insertion.  ``max_lanes`` caps lanes *per device*."""
 
     def __init__(self,
                  new_stream_policy: NewStreamPolicy = NewStreamPolicy.FIFO_REUSE,
                  parent_stream_policy: ParentStreamPolicy = ParentStreamPolicy.FIRST_CHILD_INHERITS,
-                 max_lanes: Optional[int] = None) -> None:
+                 max_lanes: Optional[int] = None,
+                 num_devices: int = 1,
+                 placement: Union[str, PlacementPolicy, None] = None) -> None:
         self.new_stream_policy = new_stream_policy
         self.parent_stream_policy = parent_stream_policy
         self.max_lanes = max_lanes
+        self.num_devices = max(1, num_devices)
+        self.placement = make_placement(placement)
         self.lanes: Dict[int, Lane] = {}
-        self._free: deque = deque()          # FIFO of idle lane ids
+        self._free: Dict[int, deque] = {}    # device -> FIFO of idle lane ids
         self.lanes_created = 0
         self.events_created = 0
+        self.events_cross_device = 0
 
     # ------------------------------------------------------------------
-    def _new_lane(self) -> Lane:
-        lane = Lane(self.lanes_created)
+    def device_lanes(self, device: int) -> List[Lane]:
+        return [l for l in self.lanes.values() if l.device_id == device]
+
+    def device_load(self, device: int, is_done) -> float:
+        return sum(l.load(is_done) for l in self.device_lanes(device))
+
+    def place(self, element: ComputationalElement, is_done) -> int:
+        """Pick the device for ``element`` (0 when single-device)."""
+        if self.num_devices <= 1:
+            return 0
+        d = self.placement.choose(element, self, is_done)
+        return min(max(0, int(d)), self.num_devices - 1)
+
+    # ------------------------------------------------------------------
+    def _new_lane(self, device: int) -> Lane:
+        lane = Lane(self.lanes_created, device_id=device)
         self.lanes[lane.lane_id] = lane
         self.lanes_created += 1
         return lane
 
-    def _acquire_free_lane(self, is_done) -> Lane:
+    def _acquire_free_lane(self, is_done, device: int) -> Lane:
+        free = self._free.setdefault(device, deque())
         if self.new_stream_policy is NewStreamPolicy.FIFO_REUSE:
             # Reclaim lanes whose queues drained (FIFO order, §IV-C).
-            for _ in range(len(self._free)):
-                lane_id = self._free.popleft()
+            for _ in range(len(free)):
+                lane_id = free.popleft()
                 lane = self.lanes[lane_id]
                 if lane.pending(is_done) == 0:
                     return lane
-                self._free.append(lane_id)
+                free.append(lane_id)
             # Lazily scan for drained lanes not yet returned to the pool.
             for lane in self.lanes.values():
-                if lane.pending(is_done) == 0 and lane.lane_id not in self._free:
+                if (lane.device_id == device and lane.pending(is_done) == 0
+                        and lane.lane_id not in free):
                     return lane
-        if self.max_lanes is not None and len(self.lanes) >= self.max_lanes:
-            # Saturated: fall back to the least-loaded lane.
-            return min(self.lanes.values(), key=lambda l: l.pending(is_done))
-        return self._new_lane()
+        dev_lanes = self.device_lanes(device)
+        if self.max_lanes is not None and len(dev_lanes) >= self.max_lanes:
+            # Saturated: fall back to the least-loaded lane on this device.
+            return min(dev_lanes, key=lambda l: l.pending(is_done))
+        return self._new_lane(device)
 
     # ------------------------------------------------------------------
     def assign(self, element: ComputationalElement,
@@ -99,27 +215,36 @@ class StreamManager:
         A parent needs no event when it is the lane's current tail (lane
         order guarantees completion) — the "first child inherits" rule; every
         other *unfinished* parent contributes one synchronization event.
+        ``element.device`` (set by :meth:`place`) constrains inheritance: a
+        parent's lane is only inherited when it lives on the same device.
         """
         parents = element.parents
+        device = element.device if element.device is not None else 0
         lane: Optional[Lane] = None
 
         if parents and self.parent_stream_policy is ParentStreamPolicy.SAME_AS_PARENT:
-            lane = self.lanes[parents[0].stream]
+            plane = self.lanes.get(parents[0].stream)
+            if plane is not None and plane.device_id == device:
+                lane = plane
         elif parents:
             # First child inherits: find a parent that (a) sits at the tail of
-            # its lane and (b) has no scheduled child yet on that lane.
+            # its lane, (b) lives on the chosen device, and (c) has no
+            # scheduled child yet on that lane.
             for p in sorted(parents, key=lambda q: -q.cost_s):
                 if p.stream is None:
                     continue
                 plane = self.lanes[p.stream]
+                if plane.device_id != device:
+                    continue
                 if plane.last is p and not is_done(p):
                     lane = plane
                     break
 
         if lane is None:
-            lane = self._acquire_free_lane(is_done)
+            lane = self._acquire_free_lane(is_done, device)
 
         element.stream = lane.lane_id
+        element.device = lane.device_id
         lane.in_flight.append(element)
         inherited_tail = lane.last
         lane.last = element
@@ -134,6 +259,8 @@ class StreamManager:
             if p.stream == lane.lane_id and (p is inherited_tail or self._precedes(lane, p)):
                 continue  # ordered by the lane queue
             events.append(p)
+            if p.device is not None and p.device != lane.device_id:
+                self.events_cross_device += 1
         self.events_created += len(events)
         return lane, events
 
@@ -150,9 +277,20 @@ class StreamManager:
             return
         if element in lane.in_flight:
             lane.in_flight.remove(element)
-        if not lane.in_flight and lane.lane_id not in self._free:
-            self._free.append(lane.lane_id)
+        free = self._free.setdefault(lane.device_id, deque())
+        if not lane.in_flight and lane.lane_id not in free:
+            free.append(lane.lane_id)
 
     def stats(self) -> dict:
-        return {"lanes_created": self.lanes_created,
-                "events_created": self.events_created}
+        out = {"lanes_created": self.lanes_created,
+               "events_created": self.events_created}
+        if self.num_devices > 1:
+            out.update({
+                "num_devices": self.num_devices,
+                "placement": self.placement.name,
+                "events_cross_device": self.events_cross_device,
+                "lanes_per_device": {
+                    d: len(self.device_lanes(d))
+                    for d in range(self.num_devices)},
+            })
+        return out

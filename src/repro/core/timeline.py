@@ -19,7 +19,7 @@ from typing import Dict, Iterable, List, Optional, Tuple
 class Span:
     uid: int
     name: str
-    kind: str          # "compute" | "h2d" | "d2h" | "host"
+    kind: str          # "compute" | "h2d" | "d2h" | "d2d" | "host"
     lane: Optional[int]
     t0: float
     t1: float
@@ -89,7 +89,8 @@ class Timeline:
 
     # ------------------------------------------------------------------
     def device_spans(self) -> List[Span]:
-        return [s for s in self.spans if s.kind in ("compute", "h2d", "d2h")]
+        return [s for s in self.spans
+                if s.kind in ("compute", "h2d", "d2h", "d2d")]
 
     @property
     def makespan(self) -> float:
@@ -100,7 +101,8 @@ class Timeline:
 
     def overlap_metrics(self) -> Dict[str, float]:
         comp = [(s.t0, s.t1) for s in self.spans if s.kind == "compute"]
-        xfer = [(s.t0, s.t1) for s in self.spans if s.kind in ("h2d", "d2h")]
+        xfer = [(s.t0, s.t1) for s in self.spans
+                if s.kind in ("h2d", "d2h", "d2d")]
         u_comp, u_xfer = _union(comp), _union(xfer)
         t_comp, t_xfer = _measure(u_comp), _measure(u_xfer)
 
@@ -135,7 +137,7 @@ class Timeline:
         import json
         events = []
         for s in self.spans:
-            tid = {"h2d": -1, "d2h": -2, "host": -3}.get(
+            tid = {"h2d": -1, "d2h": -2, "host": -3, "d2d": -5}.get(
                 s.kind, s.lane if s.lane is not None else -4)
             events.append({
                 "name": s.name, "cat": s.kind, "ph": "X",
@@ -144,6 +146,7 @@ class Timeline:
             })
         meta = [{"name": "thread_name", "ph": "M", "pid": 0, "tid": t,
                  "args": {"name": n}} for t, n in
-                [(-1, "H2D engine"), (-2, "D2H engine"), (-3, "host")]]
+                [(-1, "H2D engine"), (-2, "D2H engine"), (-3, "host"),
+                 (-5, "D2D link")]]
         with open(path, "w") as f:
             json.dump({"traceEvents": meta + events}, f)

@@ -78,10 +78,19 @@ def main() -> None:
 
         ckpt = CheckpointManager(args.ckpt) if args.ckpt else None
         start = 0
-        if ckpt and ckpt.latest_step() is not None:
-            start = ckpt.latest_step()
-            state = ckpt.restore(like=state)
-            print(f"resumed from step {start}")
+        if ckpt:
+            # (step, state) resolved atomically: resuming the loop from a
+            # different step than the restored state breaks exact resume.
+            ck_step, ck_state, extra = ckpt.restore_latest(like=state)
+            if ck_step is not None:
+                saved_seed = extra.get("stream_seed")
+                if saved_seed is not None and saved_seed != stream.seed:
+                    raise ValueError(
+                        f"checkpoint was trained with stream seed "
+                        f"{saved_seed}, this run has {stream.seed}: "
+                        f"resume would not be exact")
+                start, state = ck_step, ck_state
+                print(f"resumed from step {start}")
 
         t0 = time.time()
         for step in range(start, args.steps):
@@ -93,7 +102,8 @@ def main() -> None:
                       f"gnorm={float(metrics['grad_norm']):.3f} "
                       f"lr={float(metrics['lr']):.2e}")
             if ckpt and (step + 1) % args.ckpt_every == 0:
-                ckpt.save(step + 1, state)
+                ckpt.save(step + 1, state,
+                          extra={"stream_seed": stream.seed})
         if ckpt:
             ckpt.wait()
         dt = time.time() - t0

@@ -92,10 +92,20 @@ class TaskGraphTrainer:
         start_step = 0
         if state is None:
             state = self.init_state()
-            if self.ckpt and resume and self.ckpt.latest_step() is not None:
-                start_step = self.ckpt.latest_step()
-                state = self.ckpt.restore(like=state)
-                report.restarts += 1
+            if self.ckpt and resume:
+                # restore_latest resolves (step, state) atomically — resuming
+                # the loop from a step that disagrees with the restored state
+                # is what broke bit-exact restart.
+                ck_step, ck_state, extra = self.ckpt.restore_latest(like=state)
+                if ck_step is not None:
+                    saved_seed = extra.get("stream_seed")
+                    if saved_seed is not None and saved_seed != self.stream.seed:
+                        raise ValueError(
+                            f"checkpoint was trained with stream seed "
+                            f"{saved_seed}, trainer has {self.stream.seed}: "
+                            f"resume would not be exact")
+                    start_step, state = ck_step, ck_state
+                    report.restarts += 1
 
         sched = self.sched
         state_v = ManagedValue(sched, state, name="train_state")
@@ -130,7 +140,8 @@ class TaskGraphTrainer:
                 report.losses.append(float(m["loss"]))
             if self.ckpt and (step + 1) % self.ckpt_every == 0:
                 snap = state_v.get()
-                self.ckpt.save(step + 1, snap)
+                self.ckpt.save(step + 1, snap,
+                               extra={"stream_seed": self.stream.seed})
             report.steps_run += 1
 
         sched.sync()

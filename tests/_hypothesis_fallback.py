@@ -1,0 +1,143 @@
+"""Offline fallback for `hypothesis`.
+
+The tier-1 suite must collect and run on machines where `hypothesis` is not
+installed and cannot be fetched.  When the real library is available we
+re-export it untouched; otherwise ``@given`` degrades to a small number of
+deterministic pseudo-random examples (seeded per example index, so failures
+are reproducible) and ``@settings`` only caps the example count.
+
+Usage in test modules::
+
+    from _hypothesis_fallback import given, settings, st
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only where hypothesis exists
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import random
+
+    # Keep the fallback fast: even when a test asks for max_examples=200,
+    # run at most this many fixed examples.
+    _MAX_FALLBACK_EXAMPLES = 10
+    _DEFAULT_EXAMPLES = 5
+
+    class _Strategy:
+        def example(self, rng: random.Random):
+            raise NotImplementedError
+
+    class _Integers(_Strategy):
+        def __init__(self, lo, hi):
+            self.lo, self.hi = lo, hi
+
+        def example(self, rng):
+            return rng.randint(self.lo, self.hi)
+
+    class _Floats(_Strategy):
+        def __init__(self, lo, hi):
+            self.lo, self.hi = lo, hi
+
+        def example(self, rng):
+            return rng.uniform(self.lo, self.hi)
+
+    class _Booleans(_Strategy):
+        def example(self, rng):
+            return rng.random() < 0.5
+
+    class _SampledFrom(_Strategy):
+        def __init__(self, seq):
+            self.seq = list(seq)
+
+        def example(self, rng):
+            return self.seq[rng.randrange(len(self.seq))]
+
+    class _Lists(_Strategy):
+        def __init__(self, elements, min_size=0, max_size=None, unique=False):
+            self.elements = elements
+            self.min_size = min_size
+            self.max_size = max_size if max_size is not None else min_size + 4
+            self.unique = unique
+
+        def example(self, rng):
+            size = rng.randint(self.min_size, self.max_size)
+            out, seen = [], set()
+            attempts = 0
+            while len(out) < size and attempts < 100 * (size + 1):
+                attempts += 1
+                v = self.elements.example(rng)
+                if self.unique:
+                    if v in seen:
+                        continue
+                    seen.add(v)
+                out.append(v)
+            return out
+
+    class _CompositeResult(_Strategy):
+        def __init__(self, fn, args, kwargs):
+            self.fn, self.args, self.kwargs = fn, args, kwargs
+
+        def example(self, rng):
+            return self.fn(lambda s: s.example(rng), *self.args,
+                           **self.kwargs)
+
+    class _StrategiesModule:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Integers(min_value, max_value)
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Floats(min_value, max_value)
+
+        @staticmethod
+        def booleans():
+            return _Booleans()
+
+        @staticmethod
+        def sampled_from(seq):
+            return _SampledFrom(seq)
+
+        @staticmethod
+        def lists(elements, *, min_size=0, max_size=None, unique=False):
+            return _Lists(elements, min_size, max_size, unique)
+
+        @staticmethod
+        def composite(fn):
+            def make(*args, **kwargs):
+                return _CompositeResult(fn, args, kwargs)
+            return make
+
+    st = _StrategiesModule()
+
+    def given(*strategies):
+        def decorate(fn):
+            # NOTE: the wrapper takes no parameters on purpose — pytest must
+            # not mistake the strategy-filled arguments for fixtures.
+            def wrapper():
+                n = min(wrapper._max_examples, _MAX_FALLBACK_EXAMPLES)
+                for i in range(n):
+                    rng = random.Random(0xC0FFEE + 9176 * i)
+                    vals = [s.example(rng) for s in strategies]
+                    try:
+                        fn(*vals)
+                    except Exception:
+                        print(f"falsifying example (fallback #{i}): {vals!r}")
+                        raise
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = getattr(fn, "__qualname__", fn.__name__)
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            wrapper._max_examples = _DEFAULT_EXAMPLES
+            return wrapper
+        return decorate
+
+    def settings(max_examples=_DEFAULT_EXAMPLES, deadline=None, **_ignored):
+        def decorate(fn):
+            if hasattr(fn, "_max_examples"):
+                fn._max_examples = max_examples
+            return fn
+        return decorate

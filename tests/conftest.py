@@ -1,0 +1,19 @@
+"""Shared pytest config for the tier-1 suite.
+
+The ``slow`` marker (declared in pytest.ini) carves out the fast tier that
+CI runs on every push (``scripts/ci_fast.sh`` / ``-m "not slow"``).  Slow
+standalone tests carry an explicit ``@pytest.mark.slow``; for the
+arch-parametrized model tests the heavyweight configs are marked here so
+the parametrize decorators stay readable.
+"""
+import pytest
+
+# Reduced configs that still take many seconds per test to jit on CPU.
+_SLOW_ARCHS = ("seamless_m4t_medium", "gemma3_12b")
+
+
+def pytest_collection_modifyitems(items):
+    for item in items:
+        if (item.fspath.basename == "test_models.py"
+                and any(f"[{a}]" in item.name for a in _SLOW_ARCHS)):
+            item.add_marker(pytest.mark.slow)

@@ -1,7 +1,7 @@
 """Unit + property tests for the runtime DAG dependency inference (Fig. 3)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_fallback import given, settings, st
 
 from repro.core import (ComputationDAG, ComputationalElement, ElementKind,
                         const, inout, out)

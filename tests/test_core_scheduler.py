@@ -2,7 +2,7 @@
 host-sync granularity, serial-vs-parallel timing properties."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_fallback import given, settings, st
 
 import jax
 import jax.numpy as jnp

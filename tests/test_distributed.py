@@ -27,6 +27,7 @@ def run_sub(code: str) -> dict:
     return json.loads(out.stdout.strip().splitlines()[-1])
 
 
+@pytest.mark.slow
 def test_sharded_train_step_matches_single_device():
     """One train step on a (2, 4) mesh must equal the unsharded step."""
     res = run_sub("""
@@ -117,6 +118,7 @@ def test_compressed_psum_error_feedback():
     assert res["err_avg"] < 0.02, res       # EF drives the average error down
 
 
+@pytest.mark.slow
 def test_elastic_remesh_preserves_state():
     """Re-sharding a train state onto a smaller mesh (device loss) keeps
     values identical — the elastic-scaling path."""
@@ -145,6 +147,7 @@ def test_elastic_remesh_preserves_state():
     assert res["mesh4"] == {"data": 2, "model": 2}
 
 
+@pytest.mark.slow
 def test_dryrun_cell_compiles_on_toy_mesh():
     """End-to-end build_cell -> lower -> compile on an 8-device mesh with a
     reduced config (fast proxy for the 512-device dry-run)."""

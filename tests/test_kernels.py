@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_fallback import given, settings, st
 
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
@@ -44,6 +44,7 @@ def test_flash_attention_matches_ref(B, S, H, Hkv, hd, window, softcap,
                                np.asarray(ref, np.float32), **_tol(dtype))
 
 
+@pytest.mark.slow
 @settings(max_examples=10, deadline=None)
 @given(st.sampled_from([64, 128, 256]), st.sampled_from([1, 2]),
        st.sampled_from([16, 32, 64]), st.sampled_from([1, 2, 4]),

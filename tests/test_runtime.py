@@ -31,6 +31,7 @@ def test_trainer_runs_through_scheduler(cfg):
         tr.sched.shutdown()
 
 
+@pytest.mark.slow
 def test_trainer_deterministic_across_schedulers(cfg):
     """Parallel-async scheduling must not change training results."""
     def losses(policy):
@@ -45,6 +46,7 @@ def test_trainer_deterministic_across_schedulers(cfg):
                                rtol=1e-5)
 
 
+@pytest.mark.slow
 def test_checkpoint_restart_exact_resume(cfg):
     """Crash at step 5, restore from step 4, finish: the loss trajectory
     after resume must equal an uninterrupted run (deterministic stream)."""

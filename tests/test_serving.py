@@ -2,7 +2,7 @@
 metamorphic properties of the overlap metrics."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_fallback import given, settings, st
 
 import jax
 

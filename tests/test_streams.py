@@ -1,0 +1,169 @@
+"""StreamManager unit tests: FIFO lane reclaim, max_lanes saturation,
+event accounting, and scheduler element retirement (§IV-C)."""
+import numpy as np
+import pytest
+
+from repro.core import (ComputationalElement, StreamManager, const, inout,
+                        make_scheduler, out)
+
+
+def ce(*args, cost_s=0.0, name=""):
+    return ComputationalElement(fn=None, args=tuple(args), name=name,
+                                cost_s=cost_s)
+
+
+def link(child, *parents):
+    child.parents = list(parents)
+    for p in parents:
+        p.children.append(child)
+    return child
+
+
+class DoneSet:
+    """Explicit completion oracle for driving StreamManager directly."""
+
+    def __init__(self):
+        self.done = set()
+
+    def finish(self, *elements):
+        self.done.update(e.uid for e in elements)
+
+    def __call__(self, element):
+        return element.uid in self.done
+
+
+# ----------------------------------------------------------------------
+# FIFO lane reclaim
+# ----------------------------------------------------------------------
+
+def test_fifo_lane_reclaim_order():
+    sm = StreamManager()
+    done = DoneSet()
+    first = [ce(name=f"a{i}") for i in range(3)]
+    for e in first:
+        sm.assign(e, done)
+    assert [e.stream for e in first] == [0, 1, 2]
+
+    # Release in order 1, 2, 0: the free pool must hand lanes back in that
+    # FIFO order, not lane-id order.
+    done.finish(*first)
+    for idx in (1, 2, 0):
+        sm.release(first[idx])
+    second = [ce(name=f"b{i}") for i in range(3)]
+    for e in second:
+        sm.assign(e, done)
+    assert [e.stream for e in second] == [1, 2, 0]
+    assert sm.lanes_created == 3            # reused, never created anew
+
+
+def test_new_lane_only_when_no_empty_lane():
+    sm = StreamManager()
+    done = DoneSet()
+    e1 = ce(name="e1")
+    sm.assign(e1, done)
+    # e1 still in flight: an independent element must get a fresh lane.
+    e2 = ce(name="e2")
+    sm.assign(e2, done)
+    assert e2.stream != e1.stream
+    assert sm.lanes_created == 2
+
+
+# ----------------------------------------------------------------------
+# max_lanes saturation -> least-loaded fallback
+# ----------------------------------------------------------------------
+
+def test_max_lanes_saturation_falls_back_to_least_loaded():
+    sm = StreamManager(max_lanes=2)
+    done = DoneSet()
+    a, b = ce(name="a"), ce(name="b")
+    sm.assign(a, done)
+    sm.assign(b, done)
+    assert sm.lanes_created == 2
+
+    # Load lane of `a` with one more element: lane(a)=2 pending, lane(b)=1.
+    extra = link(ce(name="extra"), a)
+    done_oracle = done
+    sm.assign(extra, done_oracle)
+    assert extra.stream == a.stream
+
+    # Saturated: the next independent element must go to the least-loaded
+    # lane (b's), not create lane 3.
+    c = ce(name="c")
+    sm.assign(c, done)
+    assert sm.lanes_created == 2
+    assert c.stream == b.stream
+
+
+# ----------------------------------------------------------------------
+# Event accounting: same-lane parents are free, cross-lane parents cost one
+# ----------------------------------------------------------------------
+
+def test_tail_parent_needs_no_event():
+    sm = StreamManager()
+    done = DoneSet()
+    p = ce(name="p", cost_s=1e-3)
+    sm.assign(p, done)
+    child = link(ce(name="child"), p)
+    lane, events = sm.assign(child, done)
+    assert lane.lane_id == p.stream         # first child inherits
+    assert events == []                     # ordered by the lane queue
+    assert sm.events_created == 0
+
+
+def test_cross_lane_parent_costs_one_event():
+    sm = StreamManager()
+    done = DoneSet()
+    p1, p2 = ce(name="p1", cost_s=2e-3), ce(name="p2", cost_s=1e-3)
+    sm.assign(p1, done)
+    sm.assign(p2, done)
+    assert p1.stream != p2.stream
+    child = link(ce(name="child"), p1, p2)
+    lane, events = sm.assign(child, done)
+    # Inherits the costlier parent's lane; the other parent needs one event.
+    assert lane.lane_id == p1.stream
+    assert events == [p2]
+    assert sm.events_created == 1
+
+
+def test_earlier_same_lane_parent_needs_no_event():
+    sm = StreamManager()
+    done = DoneSet()
+    p = ce(name="p", cost_s=1e-3)
+    sm.assign(p, done)
+    c1 = link(ce(name="c1", cost_s=1e-3), p)
+    sm.assign(c1, done)
+    assert c1.stream == p.stream
+    # c2 depends on BOTH p and c1; both sit on the same lane (c1 is tail,
+    # p precedes it) -> zero events.
+    c2 = link(ce(name="c2"), p, c1)
+    lane, events = sm.assign(c2, done)
+    assert lane.lane_id == p.stream
+    assert events == []
+
+
+def test_finished_parent_needs_no_event():
+    sm = StreamManager()
+    done = DoneSet()
+    p1, p2 = ce(name="p1"), ce(name="p2")
+    sm.assign(p1, done)
+    sm.assign(p2, done)
+    done.finish(p2)
+    child = link(ce(name="child"), p1, p2)
+    _, events = sm.assign(child, done)
+    assert p2 not in events                 # completed: no synchronization
+
+
+# ----------------------------------------------------------------------
+# Scheduler element retirement (sync must not accumulate history)
+# ----------------------------------------------------------------------
+
+def test_sync_clears_retired_elements():
+    s = make_scheduler("parallel", simulate=True)
+    for rounds in range(3):
+        for i in range(4):
+            x = s.array(np.zeros(1024, np.float32), name=f"x{rounds}_{i}")
+            s.launch(None, [inout(x)], name="k", cost_s=1e-4)
+        s.sync()
+        # Retired elements must not be re-walked by the next sync.
+        assert s._elements == []
+    assert s.dag.num_elements == 24         # 4 kernels + 4 h2d per round
