@@ -1,0 +1,73 @@
+"""Capture/replay vs eager vs the CUDA-Graphs oracle (§V-D) on the paper's
+6 benchmarks: repeated identical episodes, steady-state medians.
+
+Also writes ``BENCH_capture.json`` (eager/replay/oracle medians per
+GPU x benchmark) so the perf trajectory is machine-readable across PRs.
+"""
+from __future__ import annotations
+
+import json
+import statistics
+
+from repro.benchsuite import BENCHMARKS, GPUS
+from repro.benchsuite.costmodel import sim_hardware
+from repro.core import make_scheduler
+
+from .common import emit, geomean
+
+SCALE = 0.02
+EPISODES = 6
+WARMUP = 2          # capture/re-record warm-up excluded from the median
+OVERHEAD = 2e-4     # high per-launch overhead: the regime replay targets
+
+
+def run_episodes(bench, gpu, mode: str) -> float:
+    """Median steady-state episode time under one launch mode."""
+    kw = {} if mode == "oracle" else {"launch_overhead_s": OVERHEAD}
+    s = make_scheduler("parallel", simulate=True,
+                       hw=sim_hardware(gpu, "parallel", True),
+                       oracle=(mode == "oracle"), **kw)
+    data = bench.make_data(SCALE)
+    times = []
+    for _ in range(WARMUP + EPISODES):
+        t0 = s.executor.host_time
+        if mode == "replay":
+            with s.capture(bench.name):
+                bench.build(s, data, gpu=gpu, iters=1)
+        else:
+            bench.build(s, data, gpu=gpu, iters=1)
+        times.append(s.executor.host_time - t0)
+    return statistics.median(times[WARMUP:])
+
+
+def main() -> list:
+    rows, result = [], {}
+    speedups, ratios = [], []
+    for gname, gpu in GPUS.items():
+        for bname, bench in BENCHMARKS.items():
+            te = run_episodes(bench, gpu, "eager")
+            tr = run_episodes(bench, gpu, "replay")
+            to = run_episodes(bench, gpu, "oracle")
+            result[f"{gname}/{bname}"] = {
+                "eager_s": te, "replay_s": tr, "oracle_s": to,
+                "replay_speedup_vs_eager": te / tr,
+                "replay_over_oracle": tr / to,
+            }
+            speedups.append(te / tr)
+            ratios.append(tr / to)
+            rows.append((f"capture/{gname}/{bname}", tr * 1e6,
+                         f"speedup_vs_eager={te / tr:.3f},"
+                         f"over_oracle={tr / to:.4f}"))
+    result["geomean"] = {"replay_speedup_vs_eager": geomean(speedups),
+                         "replay_over_oracle": geomean(ratios)}
+    rows.append(("capture/geomean", 0.0,
+                 f"speedup_vs_eager={geomean(speedups):.3f},"
+                 f"over_oracle={geomean(ratios):.4f}"))
+    with open("BENCH_capture.json", "w") as f:
+        json.dump(result, f, indent=2, sort_keys=True)
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

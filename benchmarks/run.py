@@ -10,13 +10,15 @@ import traceback
 
 
 def main() -> None:
-    from . import (bench_contention, bench_hwmetrics, bench_memory,
-                   bench_multidevice, bench_oracle, bench_overlap,
-                   bench_roofline, bench_speedup)
+    from . import (bench_capture, bench_contention, bench_hwmetrics,
+                   bench_memory, bench_multidevice, bench_oracle,
+                   bench_overlap, bench_roofline, bench_speedup)
 
     suites = [
         ("Fig.7 speedup-vs-serial", bench_speedup),
         ("Fig.8 vs-hand-optimized", bench_oracle),
+        ("Capture/replay vs eager vs oracle (BENCH_capture.json)",
+         bench_capture),
         ("Fig.9 contention", bench_contention),
         ("Fig.11 overlap", bench_overlap),
         ("Fig.12 hw-metrics", bench_hwmetrics),

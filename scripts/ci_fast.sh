@@ -4,4 +4,7 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+# Capture/replay fast path first: a focused signal before the full sweep
+# (these also run as part of the suite below).
+python -m pytest -q tests/test_capture.py
 exec python -m pytest -q -m "not slow" "$@"

@@ -1,7 +1,9 @@
 """GrJAX core: the paper's runtime DAG scheduler (see DESIGN.md §1-2)."""
 from .element import (AccessMode, Arg, ComputationalElement, ElementKind,
-                      const, inout, kernel, out)
-from .dag import ComputationDAG
+                      const, dep_key, inout, kernel, out)
+from .dag import ComputationDAG, DAGSnapshot
+from .capture import (CaptureContext, ExecutionPlan, PlanCache, PlanElement,
+                      SlotSpec)
 from .streams import (DataAffinityPlacement, Lane, MinLoadPlacement,
                       NewStreamPolicy, ParentStreamPolicy, PlacementPolicy,
                       PLACEMENT_POLICIES, RoundRobinPlacement, StreamManager)
@@ -14,8 +16,10 @@ from .scheduler import GrScheduler, make_scheduler
 
 __all__ = [
     "AccessMode", "Arg", "ComputationalElement", "ElementKind",
-    "const", "inout", "kernel", "out",
-    "ComputationDAG", "NewStreamPolicy", "ParentStreamPolicy", "StreamManager",
+    "const", "dep_key", "inout", "kernel", "out",
+    "ComputationDAG", "DAGSnapshot",
+    "CaptureContext", "ExecutionPlan", "PlanCache", "PlanElement", "SlotSpec",
+    "NewStreamPolicy", "ParentStreamPolicy", "StreamManager",
     "Lane", "PlacementPolicy", "PLACEMENT_POLICIES", "RoundRobinPlacement",
     "MinLoadPlacement", "DataAffinityPlacement",
     "ManagedArray", "Timeline", "Span", "KernelHistory",

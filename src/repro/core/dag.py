@@ -24,9 +24,15 @@ Dependency inference follows the paper's rules exactly:
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Set
+from types import MappingProxyType
+from typing import Dict, List, Mapping, Optional, Set, Tuple
 
 from .element import AccessMode, ComputationalElement
+
+# Prune a state's reader list once it grows past this many entries (a
+# long-lived const array — e.g. serving weights — otherwise accumulates
+# every retired reader ever issued).
+_READER_PRUNE = 64
 
 
 @dataclass
@@ -36,8 +42,22 @@ class _ArrayState:
     last_writer: Optional[ComputationalElement] = None
     readers: List[ComputationalElement] = field(default_factory=list)
 
-    def live(self) -> bool:
-        return self.last_writer is not None or bool(self.readers)
+
+@dataclass(frozen=True)
+class DAGSnapshot:
+    """Immutable point-in-time view of the DAG frontier.
+
+    ``writers``/``readers`` map argument keys to the *live* (active) elements
+    that could still introduce a dependency on that array; retired elements
+    are excluded.  A debugging/introspection surface (the replay fast path
+    itself uses the targeted :meth:`ComputationDAG.live_deps`) — mutating
+    the returned mappings raises."""
+
+    writers: Mapping[int, ComputationalElement]
+    readers: Mapping[int, Tuple[ComputationalElement, ...]]
+    frontier: frozenset
+    num_elements: int
+    num_edges: int
 
 
 class ComputationDAG:
@@ -48,6 +68,8 @@ class ComputationDAG:
         self.frontier: Set[ComputationalElement] = set()
         self.num_elements = 0
         self.num_edges = 0
+        # Amortized eviction threshold for dead per-array state (see _sweep).
+        self._sweep_at = 256
 
     # ------------------------------------------------------------------
     def _eligible(self, e: Optional[ComputationalElement], key: int) -> bool:
@@ -67,44 +89,130 @@ class ComputationDAG:
 
         for key, mode in element.arg_modes():
             st = self._state.get(key)
-            if st is None:
-                st = self._state[key] = _ArrayState()
-
-            if mode.writes:
-                # WAR: depend on every active reader since the last write;
-                # they transitively cover the last writer (Fig. 3 case B).
-                live_readers = [r for r in st.readers if self._eligible(r, key)]
-                if live_readers:
-                    for r in live_readers:
-                        add_parent(r)
+            if st is not None:
+                if mode.writes:
+                    # WAR: depend on every active reader since the last
+                    # write; they transitively cover the last writer
+                    # (Fig. 3 case B).
+                    live_readers = [r for r in st.readers
+                                    if self._eligible(r, key)]
+                    if live_readers:
+                        for r in live_readers:
+                            add_parent(r)
+                    elif self._eligible(st.last_writer, key):
+                        add_parent(st.last_writer)  # WAW / RAW for inout
                 elif self._eligible(st.last_writer, key):
-                    add_parent(st.last_writer)  # WAW / RAW for inout
-                # The write consumes the dependency-set entries of the
-                # previous frontier for this argument.
-                if st.last_writer is not None:
-                    st.last_writer.dep_set.discard(key)
-                    self._maybe_retire(st.last_writer)
-                for r in st.readers:
-                    r.dep_set.discard(key)
-                    self._maybe_retire(r)
-                st.last_writer = element
-                st.readers = []
-            else:  # CONST read
-                if self._eligible(st.last_writer, key):
                     add_parent(st.last_writer)  # RAW; writer's set NOT updated
-                st.readers.append(element)
+            self._transition(key, mode, element)
 
         element.parents = parents
-        for p in parents:
+        self._install(element)
+        return parents
+
+    # ------------------------------------------------------------------
+    def _transition(self, key: int, mode: AccessMode,
+                    element: ComputationalElement) -> None:
+        """Per-array frontier transition shared by :meth:`add` and
+        :meth:`adopt`: a write consumes the previous frontier's
+        dependency-set entries for this argument ("all dependency sets will
+        be updated") and becomes the last writer; a read joins the reader
+        list (the writer's set is NOT updated, Fig. 3 case C)."""
+        st = self._state.get(key)
+        if st is None:
+            st = self._state[key] = _ArrayState()
+        if mode.writes:
+            if st.last_writer is not None:
+                st.last_writer.dep_set.discard(key)
+                self._maybe_retire(st.last_writer)
+            for r in st.readers:
+                r.dep_set.discard(key)
+                self._maybe_retire(r)
+            st.last_writer = element
+            st.readers = []
+        else:
+            if len(st.readers) >= _READER_PRUNE:
+                st.readers = [r for r in st.readers if r.active]
+            st.readers.append(element)
+
+    def _install(self, element: ComputationalElement) -> None:
+        """Common bookkeeping once parents are final: edges, counters,
+        frontier membership and the dependency-set emptiness rule."""
+        for p in element.parents:
             p.children.append(element)
-        self.num_edges += len(parents)
+        self.num_edges += len(element.parents)
         self.num_elements += 1
         element.active = True
         self.frontier.add(element)
         self._maybe_retire(element)
-        return parents
 
     # ------------------------------------------------------------------
+    def adopt(self, element: ComputationalElement) -> None:
+        """Fast-path insert for a replayed element with **pre-resolved**
+        parents (``element.parents`` set by the caller from an
+        :class:`~repro.core.capture.ExecutionPlan`).
+
+        Per-array frontier state is transitioned exactly as :meth:`add` would
+        (writes consume the previous frontier's dependency-set entries, reads
+        join the reader list) but the O(frontier) parent inference is
+        skipped — that is the capture/replay fast path."""
+        for key, mode in element.arg_modes():
+            self._transition(key, mode, element)
+        self._install(element)
+
+    def live_deps(self, key: int, writes: bool) -> List[ComputationalElement]:
+        """Elements the host (or a replayed episode) must order against
+        before accessing the array ``key``: for a write, every active reader
+        since the last write (WAR) or, failing that, the live writer; for a
+        read, the live writer only (RAW)."""
+        st = self._state.get(key)
+        if st is None:
+            return []
+        if writes:
+            deps = [r for r in st.readers if self._eligible(r, key)]
+            if not deps and st.last_writer is not None and st.last_writer.active:
+                deps = [st.last_writer]
+            return deps
+        if st.last_writer is not None and st.last_writer.active:
+            return [st.last_writer]
+        return []
+
+    def snapshot(self) -> DAGSnapshot:
+        """Frozen view of the live frontier state (read-only mappings)."""
+        writers = {k: st.last_writer for k, st in self._state.items()
+                   if st.last_writer is not None and st.last_writer.active}
+        readers = {k: tuple(r for r in st.readers if r.active)
+                   for k, st in self._state.items()
+                   if any(r.active for r in st.readers)}
+        return DAGSnapshot(writers=MappingProxyType(writers),
+                           readers=MappingProxyType(readers),
+                           frontier=frozenset(self.frontier),
+                           num_elements=self.num_elements,
+                           num_edges=self.num_edges)
+
+    # ------------------------------------------------------------------
+    def _sweep(self) -> None:
+        """Amortized eviction of dead per-array state.
+
+        Long-running loops (serving) create fresh arrays per episode; their
+        ``_ArrayState`` entries outlive the arrays and — before aid-based
+        keying — a recycled ``id()`` could even alias a dead entry.  Once the
+        table grows past the high-water mark, drop every entry with no active
+        element and prune retired readers/writers from the survivors.  The
+        threshold doubles with the live size, so the cost is O(1) amortized."""
+        if len(self._state) < self._sweep_at:
+            return
+        alive: Dict[int, _ArrayState] = {}
+        for k, st in self._state.items():
+            w = st.last_writer
+            if w is not None and not w.active:
+                w = None
+            rs = [r for r in st.readers if r.active]
+            if w is not None or rs:
+                st.last_writer, st.readers = w, rs
+                alive[k] = st
+        self._state = alive
+        self._sweep_at = max(256, 2 * len(alive))
+
     def _maybe_retire(self, e: ComputationalElement) -> None:
         """Drop an element from the frontier once its dependency set is empty
         — it can no longer be a parent (§IV-B)."""
@@ -122,11 +230,13 @@ class ComputationDAG:
             cur.active = False
             self.frontier.discard(cur)
             stack.extend(cur.parents)
+        self._sweep()
 
     def retire_all(self) -> None:
         for e in list(self.frontier):
             e.active = False
         self.frontier.clear()
+        self._sweep()
 
     # ------------------------------------------------------------------
     def ancestors(self, e: ComputationalElement) -> Set[ComputationalElement]:

@@ -43,16 +43,29 @@ class AccessMode(enum.Enum):
         return self in (AccessMode.OUT, AccessMode.INOUT)
 
 
+def dep_key(array: Any) -> int:
+    """Dependency-tracking key for an argument handle.
+
+    Managed arrays carry a process-monotonic ``aid``; plain (test) objects
+    fall back to ``id()``.  ``id()`` alone is unsound in long-running loops:
+    CPython reuses addresses after GC, so a fresh array could inherit the
+    stale ``last_writer``/``readers`` frontier of a dead one.  ``aid`` keys
+    are mapped to negative ints so the two namespaces can never collide
+    (``id()`` is a non-negative address)."""
+    aid = getattr(array, "aid", None)
+    return id(array) if aid is None else -1 - aid
+
+
 @dataclass(frozen=True)
 class Arg:
     """One argument of a computational element: a managed handle + mode."""
 
-    array: Any               # ManagedArray (duck-typed; must be hashable by id)
+    array: Any               # ManagedArray (duck-typed; keyed via dep_key)
     mode: AccessMode
 
     @property
     def key(self) -> int:
-        return id(self.array)
+        return dep_key(self.array)
 
 
 class ElementKind(enum.Enum):

@@ -41,6 +41,15 @@ class Executor:
                wait_parents: List[ComputationalElement]) -> None:
         raise NotImplementedError
 
+    def submit_batch(self, items) -> None:
+        """Submit a pre-scheduled batch (capture/replay fast path).
+
+        ``items`` is a sequence of ``(element, lane_id, wait_parents)``
+        triples in topological order.  Subclasses override to pre-materialize
+        completion events / start the whole batch at once."""
+        for element, lane_id, waits in items:
+            self.submit(element, lane_id, waits)
+
     def is_done(self, element: ComputationalElement) -> bool:
         raise NotImplementedError
 
@@ -174,14 +183,28 @@ class ThreadLaneExecutor(Executor):
     def host_now(self) -> float:
         return time.perf_counter() - self._epoch
 
-    def submit(self, element, lane_id, wait_parents) -> None:
-        element.done_event = threading.Event()
-        element.error = None
+    def _worker(self, lane_id: int) -> _LaneWorker:
         worker = self._lanes.get(lane_id)
         if worker is None:
             worker = self._lanes[lane_id] = _LaneWorker(lane_id, self)
+        return worker
+
+    def submit(self, element, lane_id, wait_parents) -> None:
+        element.done_event = threading.Event()
+        element.error = None
         self._submitted.append(element)
-        worker.q.put((element, list(wait_parents)))
+        self._worker(lane_id).q.put((element, list(wait_parents)))
+
+    def submit_batch(self, items) -> None:
+        # Pre-materialize every completion event before anything is
+        # enqueued: a worker may dequeue a child and wait on a sibling-lane
+        # parent that has not been individually submitted yet.
+        for element, _, _ in items:
+            element.done_event = threading.Event()
+            element.error = None
+        for element, lane_id, waits in items:
+            self._submitted.append(element)
+            self._worker(lane_id).q.put((element, list(waits)))
 
     def is_done(self, element) -> bool:
         ev = element.done_event
@@ -280,6 +303,17 @@ class SimExecutor(Executor):
 
     # -- submission ------------------------------------------------------
     def submit(self, element, lane_id, wait_parents) -> None:
+        self._enqueue(element, lane_id)
+        self._try_start()
+
+    def submit_batch(self, items) -> None:
+        # Replay fast path: enqueue the whole pre-scheduled episode, then
+        # run a single readiness scan instead of one per element.
+        for element, lane_id, _ in items:
+            self._enqueue(element, lane_id)
+        self._try_start()
+
+    def _enqueue(self, element, lane_id) -> None:
         if element.kind is ElementKind.TRANSFER:
             kind = "h2d"
             work = float(element.transfer_bytes)
@@ -304,7 +338,6 @@ class SimExecutor(Executor):
                         src_device=min(element.src_device or 0, top))
         self._pending.append(task)
         self._lane_q.setdefault(lane_id, []).append(element.uid)
-        self._try_start()
 
     # -- readiness & rates ---------------------------------------------
     def _parents_done(self, e: ComputationalElement) -> bool:

@@ -15,19 +15,26 @@ sub-DAG from the frontier.
 """
 from __future__ import annotations
 
+import itertools
 import threading
 import time
-from typing import Callable, List, Optional, Sequence
+from typing import Callable, List, Mapping, Optional, Sequence
 
 import numpy as np
 
+from .capture import CaptureContext, ExecutionPlan, PlanCache, replay_plan
 from .dag import ComputationDAG
 from .element import (AccessMode, Arg, ComputationalElement, ElementKind,
-                      const, inout, out)
+                      const, dep_key, inout, out)
 from .executor import Executor, SimExecutor, SimHardware, ThreadLaneExecutor
 from .managed import ManagedArray
 from .streams import NewStreamPolicy, ParentStreamPolicy, StreamManager
 from .timeline import Timeline
+
+# A replayed plan is submitted with a single reduced launch overhead — the
+# cudaGraphLaunch analogue: roughly one hardware kernel-launch, however many
+# elements the plan contains.
+_PLAN_LAUNCH_OVERHEAD_S = 5e-6
 
 
 class GrScheduler:
@@ -38,6 +45,7 @@ class GrScheduler:
                  parent_stream_policy: ParentStreamPolicy = ParentStreamPolicy.FIRST_CHILD_INHERITS,
                  auto_prefetch: bool = True,
                  launch_overhead_s: Optional[float] = None,
+                 plan_launch_overhead_s: Optional[float] = None,
                  max_lanes: Optional[int] = None,
                  num_devices: int = 1,
                  placement: str = "round-robin") -> None:
@@ -55,9 +63,17 @@ class GrScheduler:
         if launch_overhead_s is None:
             launch_overhead_s = 5e-6 if policy == "parallel" else 1e-6
         self.launch_overhead_s = launch_overhead_s
+        if plan_launch_overhead_s is None:
+            plan_launch_overhead_s = min(launch_overhead_s,
+                                         _PLAN_LAUNCH_OVERHEAD_S)
+        self.plan_launch_overhead_s = plan_launch_overhead_s
         self.d2d_transfers = 0
         self._elements: List[ComputationalElement] = []
         self._tune_counts: dict = {}
+        # Graph capture & replay (capture.py): cached execution plans plus
+        # the at-most-one active capture context.
+        self.plan_cache = PlanCache()
+        self._capture: Optional[CaptureContext] = None
 
     # ------------------------------------------------------------------
     def array(self, data=None, *, shape=None, dtype=np.float32,
@@ -81,6 +97,8 @@ class GrScheduler:
         lane, events = self.streams.assign(e, self.executor.is_done)
         self.executor.submit(e, lane.lane_id, events)
         self._elements.append(e)
+        if self._capture is not None:
+            self._capture.trace(e)
 
     def _prefetch_args(self, args: Sequence[Arg], device: int = 0) -> None:
         """Insert asynchronous H2D transfers for host-resident read args."""
@@ -137,6 +155,11 @@ class GrScheduler:
         """
         if tune:
             config = dict(config, **self._tune(name, tune))
+        cap = self._capture
+        if cap is not None:
+            replayed = cap.offer(fn, tuple(args), name, config, cost_s)
+            if replayed is not None:
+                return replayed     # plan hit: submitted via the fast path
         e = ComputationalElement(fn=fn, args=tuple(args),
                                  kind=ElementKind.KERNEL, name=name,
                                  config=config, cost_s=cost_s)
@@ -167,15 +190,30 @@ class GrScheduler:
         counts = self._tune_counts.setdefault(name, 0)
         keys = sorted(tune)
         grid = [dict(zip(keys, vals)) for vals in
-                __import__("itertools").product(*(tune[k] for k in keys))]
+                itertools.product(*(tune[k] for k in keys))]
         if counts < 2 * len(grid):      # exploration phase
             choice = grid[counts % len(grid)]
         else:                           # exploitation: fastest median config
-            best = self.executor.history.best_config(name)
-            choice = ({k: type(grid[0][k])(v) for k, v in best.items()
-                       if k in keys} if best else grid[0])
+            choice = self._coerce_best_config(name, keys, grid)
         self._tune_counts[name] = counts + 1
         return choice
+
+    def _coerce_best_config(self, name: str, keys, grid) -> dict:
+        """History stores config values stringified; coerce them back to the
+        candidate types, falling back to the first grid point when history
+        is empty or a value no longer parses as the candidate type."""
+        best = self.executor.history.best_config(name)
+        if not best:
+            return grid[0]
+        choice = {}
+        for k, v in best.items():
+            if k not in keys:
+                continue
+            try:
+                choice[k] = type(grid[0][k])(v)
+            except (TypeError, ValueError):
+                return grid[0]
+        return choice or grid[0]
 
     def _run_serial(self, e: ComputationalElement) -> None:
         """Original GrCUDA behaviour: blocking, in-order, single lane, no
@@ -190,19 +228,10 @@ class GrScheduler:
     # Host accesses (ManagedArray callbacks) — paper §IV-A/B
     # ------------------------------------------------------------------
     def _sync_against(self, ma: ManagedArray, writes: bool) -> None:
-        key = id(ma)
-        st = self.dag._state.get(key)
-        if st is None:
-            return
-        deps: List[ComputationalElement] = []
-        if writes:
-            deps = [r for r in st.readers if r.active and key in r.dep_set]
-            if not deps and st.last_writer is not None and st.last_writer.active:
-                deps = [st.last_writer]
-        else:
-            if st.last_writer is not None and st.last_writer.active:
-                deps = [st.last_writer]
-        deps = [d for d in deps if not d.is_host]
+        deps = [d for d in self.dag.live_deps(dep_key(ma), writes)
+                if not d.is_host]
+        if deps and self._capture is not None:
+            self._capture.note_host_sync(deps)
         if not deps:
             return  # fast path: host access introduces no dependency (§IV-A)
         e = ComputationalElement(
@@ -225,6 +254,12 @@ class GrScheduler:
             self._d2h(ma)
 
     def host_write(self, ma: ManagedArray) -> None:
+        if self._capture is not None:
+            # A host write flips the array's logical location in a way a
+            # replaying plan cannot see (eager would re-prefetch the new
+            # host data); the capture context demotes the rest of the
+            # episode to eager execution when the array is plan-bound.
+            self._capture.note_host_write(ma)
         self._sync_against(ma, writes=True)
         if ma.device_valid and not ma.host_valid:
             self._d2h(ma)  # read-modify-write safety for partial updates
@@ -243,8 +278,36 @@ class GrScheduler:
         ma.host_valid = True
 
     # ------------------------------------------------------------------
+    # Graph capture & replay (capture.py, §V-D CUDA-Graphs analogue)
+    # ------------------------------------------------------------------
+    def capture(self, name: str) -> CaptureContext:
+        """Enter a transparent capture/replay context.
+
+        The first episode under ``name`` (per structural signature) runs
+        eagerly and is traced into an :class:`ExecutionPlan`; later episodes
+        that issue the identical launch sequence are replayed through the
+        fast path, skipping DAG inference, lane assignment and per-element
+        launch overhead.  Divergence invalidates the plan and the episode
+        continues eagerly — capture never changes program semantics.  Under
+        the serial policy the context is a no-op passthrough."""
+        return CaptureContext(self, name)
+
+    def replay(self, plan: ExecutionPlan,
+               bindings: Optional[Mapping] = None
+               ) -> List[ComputationalElement]:
+        """Explicitly re-submit a captured plan with fresh arrays bound by
+        slot name or index; unbound slots reuse the captured arrays."""
+        if self.policy != "parallel":
+            raise RuntimeError("replay requires the parallel policy")
+        if self._capture is not None:
+            raise RuntimeError("cannot replay inside a capture context")
+        return replay_plan(self, plan, bindings)
+
+    # ------------------------------------------------------------------
     def sync(self) -> None:
         """Full barrier: host waits for every in-flight computation."""
+        if self._capture is not None:
+            self._capture.note_host_sync(None)
         self.executor.wait_all()
         self.dag.retire_all()
         for e in self._elements:
@@ -264,7 +327,8 @@ class GrScheduler:
                 "edges": self.dag.num_edges,
                 "d2d_transfers": self.d2d_transfers,
                 **self.streams.stats(),
-                **self.executor.history.stats()}
+                **self.executor.history.stats(),
+                **self.plan_cache.stats()}
 
     def shutdown(self) -> None:
         self.executor.shutdown()

@@ -52,6 +52,10 @@ class Lane:
     device_id: int = 0
     in_flight: List[ComputationalElement] = field(default_factory=list)
     last: Optional[ComputationalElement] = None   # tail of the lane's queue
+    # Lanes pre-reserved for an execution plan (capture/replay) are excluded
+    # from the eager scheduler's FIFO-reuse pool, so interleaved eager work
+    # cannot serialize into a replayed episode's queues.
+    reserved: bool = False
 
     def pending(self, is_done: Callable[[ComputationalElement], bool]) -> int:
         self.in_flight = [e for e in self.in_flight if not is_done(e)]
@@ -163,6 +167,11 @@ class StreamManager:
         self.lanes_created = 0
         self.events_created = 0
         self.events_cross_device = 0
+        # plan key -> list of reserved lane-set instances, each mapping the
+        # plan-local lane id to a real lane id (capture/replay, §V-D oracle).
+        self._plan_lanes: Dict[str, List[Dict[int, int]]] = {}
+        self._plan_rr = 0
+        self.max_plan_instances = 4
 
     # ------------------------------------------------------------------
     def device_lanes(self, device: int) -> List[Lane]:
@@ -197,11 +206,14 @@ class StreamManager:
                 free.append(lane_id)
             # Lazily scan for drained lanes not yet returned to the pool.
             for lane in self.lanes.values():
-                if (lane.device_id == device and lane.pending(is_done) == 0
+                if (lane.device_id == device and not lane.reserved
+                        and lane.pending(is_done) == 0
                         and lane.lane_id not in free):
                     return lane
-        dev_lanes = self.device_lanes(device)
-        if self.max_lanes is not None and len(dev_lanes) >= self.max_lanes:
+        # Reserved plan lanes neither count toward nor satisfy the eager cap.
+        dev_lanes = [l for l in self.device_lanes(device) if not l.reserved]
+        if (self.max_lanes is not None and dev_lanes
+                and len(dev_lanes) >= self.max_lanes):
             # Saturated: fall back to the least-loaded lane on this device.
             return min(dev_lanes, key=lambda l: l.pending(is_done))
         return self._new_lane(device)
@@ -224,17 +236,20 @@ class StreamManager:
 
         if parents and self.parent_stream_policy is ParentStreamPolicy.SAME_AS_PARENT:
             plane = self.lanes.get(parents[0].stream)
-            if plane is not None and plane.device_id == device:
+            if (plane is not None and plane.device_id == device
+                    and not plane.reserved):
                 lane = plane
         elif parents:
             # First child inherits: find a parent that (a) sits at the tail of
             # its lane, (b) lives on the chosen device, and (c) has no
-            # scheduled child yet on that lane.
+            # scheduled child yet on that lane.  Reserved plan lanes are
+            # never inherited — eager children of replayed elements must not
+            # serialize into a plan's queues.
             for p in sorted(parents, key=lambda q: -q.cost_s):
                 if p.stream is None:
                     continue
                 plane = self.lanes[p.stream]
-                if plane.device_id != device:
+                if plane.device_id != device or plane.reserved:
                     continue
                 if plane.last is p and not is_done(p):
                     lane = plane
@@ -270,6 +285,71 @@ class StreamManager:
         return p.stream == lane.lane_id
 
     # ------------------------------------------------------------------
+    # Capture/replay: pre-reserved lane sets for execution plans (§V-D).
+    # ------------------------------------------------------------------
+    def reserve(self, plan_key: str, lane_devices, is_done) -> Dict[int, Lane]:
+        """Pre-reserve a dedicated lane set for one replay of an execution
+        plan.  ``lane_devices`` is the plan's (plan-local lane id -> device)
+        mapping.  The first idle instance is reused (mirroring
+        ``cudaGraphLaunch`` re-submitting into the same streams); while all
+        instances are busy, up to ``max_plan_instances`` fresh sets are
+        created so concurrent replays of the same plan keep space-sharing,
+        after which instances are handed out round-robin (lane FIFO order
+        keeps overlapping replays correct — they merely serialize)."""
+        instances = self._plan_lanes.setdefault(plan_key, [])
+        for inst in instances:
+            lanes = {c: self.lanes[lid] for c, lid in inst.items()}
+            if all(l.pending(is_done) == 0 for l in lanes.values()):
+                return lanes
+        if len(instances) < self.max_plan_instances:
+            inst = {}
+            for cap_id, dev in sorted(lane_devices):
+                # Recycle a drained eager lane when one exists — plan churn
+                # (record/invalidate cycles) must not grow the lane table
+                # (= worker threads on the real executor) without bound.
+                lane = self._reclaim_idle_lane(dev, is_done) or self._new_lane(dev)
+                lane.reserved = True
+                inst[cap_id] = lane.lane_id
+            instances.append(inst)
+            return {c: self.lanes[lid] for c, lid in inst.items()}
+        inst = instances[self._plan_rr % len(instances)]
+        self._plan_rr += 1
+        return {c: self.lanes[lid] for c, lid in inst.items()}
+
+    def _reclaim_idle_lane(self, device: int, is_done) -> Optional[Lane]:
+        free = self._free.get(device)
+        if not free:
+            return None
+        for _ in range(len(free)):
+            lid = free.popleft()
+            lane = self.lanes[lid]
+            if lane.pending(is_done) == 0:
+                return lane
+            free.append(lid)
+        return None
+
+    def unreserve(self, plan_key: str) -> None:
+        """Return a dropped plan's lanes to the eager pool (called when a
+        plan is invalidated or evicted from the cache — without this, every
+        divergence in a long-running loop would leak a reserved lane set).
+        The lanes may still hold in-flight replayed work, so they are only
+        un-flagged here; the eager FIFO-reuse scan reclaims them once
+        drained."""
+        for inst in self._plan_lanes.pop(plan_key, []):
+            for lid in inst.values():
+                lane = self.lanes.get(lid)
+                if lane is not None:
+                    lane.reserved = False
+
+    def bind_to_lane(self, lane: Lane, element: ComputationalElement) -> None:
+        """Replay fast path: place ``element`` on a pre-reserved lane,
+        skipping placement and the assignment algorithm entirely."""
+        element.stream = lane.lane_id
+        element.device = lane.device_id
+        lane.in_flight.append(element)
+        lane.last = element
+
+    # ------------------------------------------------------------------
     def release(self, element: ComputationalElement) -> None:
         """Called when the host has synchronized with ``element``."""
         lane = self.lanes.get(element.stream) if element.stream is not None else None
@@ -277,6 +357,14 @@ class StreamManager:
             return
         if element in lane.in_flight:
             lane.in_flight.remove(element)
+        if not lane.in_flight and lane.last is not None and not lane.last.active:
+            # A drained lane's retired tail can never be inherited again,
+            # but through parents/children lists it would pin the whole
+            # episode graph — and, transitively, its arrays — in memory for
+            # as long as the lane idles.
+            lane.last = None
+        if lane.reserved:
+            return    # plan lanes are recycled via reserve(), not the pool
         free = self._free.setdefault(lane.device_id, deque())
         if not lane.in_flight and lane.lane_id not in free:
             free.append(lane.lane_id)
@@ -284,6 +372,9 @@ class StreamManager:
     def stats(self) -> dict:
         out = {"lanes_created": self.lanes_created,
                "events_created": self.events_created}
+        if self._plan_lanes:
+            out["plan_lane_sets"] = sum(len(v) for v in
+                                        self._plan_lanes.values())
         if self.num_devices > 1:
             out.update({
                 "num_devices": self.num_devices,

@@ -19,6 +19,7 @@ kernel history (§IV-A put to work).
 """
 from __future__ import annotations
 
+import contextlib
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional
@@ -56,7 +57,8 @@ class TaskGraphTrainer:
                  ckpt_dir: Optional[str] = None, ckpt_every: int = 10,
                  use_flash: bool = False, remat: bool = True,
                  seed: int = 0,
-                 straggler_factor: float = 3.0) -> None:
+                 straggler_factor: float = 3.0,
+                 capture_steps: bool = True) -> None:
         self.cfg = cfg
         self.optimizer = optimizer or AdamW(lr=1e-3, warmup=10,
                                             total_steps=1000)
@@ -70,6 +72,9 @@ class TaskGraphTrainer:
         self.ckpt = CheckpointManager(ckpt_dir) if ckpt_dir else None
         self.ckpt_every = ckpt_every
         self.sched.executor.history.straggler_factor = straggler_factor
+        # The steady-state step issues an identical episode every iteration;
+        # capture/replay turns its per-launch scheduling into a plan launch.
+        self._capture_steps = capture_steps
         self._seq = seq_len
 
     # ------------------------------------------------------------------
@@ -133,8 +138,14 @@ class TaskGraphTrainer:
             args = [inout(state_v)] + [const(slot[k])
                                        for k in sorted(slot.keys())]
             args.append(out(metrics_v))
-            e = sched.launch(step_kernel, args, name="train_step",
-                             cost_s=0.0)
+            # Auto-capture the steady-state step: the double-buffered slots
+            # alternate arrays but bind the same plan slots, so one plan
+            # covers both phases after a short warm-up.
+            ctx = (sched.capture("train_step") if self._capture_steps
+                   else contextlib.nullcontext())
+            with ctx:
+                e = sched.launch(step_kernel, args, name="train_step",
+                                 cost_s=0.0)
             if (step + 1) % metrics_every == 0 or step == n_steps - 1:
                 m = metrics_v.get()                     # syncs this lane only
                 report.losses.append(float(m["loss"]))

@@ -129,6 +129,105 @@ def test_duplicate_array_in_args_uses_strongest_mode():
 
 
 # ----------------------------------------------------------------------
+# Corner cases backing the capture/replay refactor
+# ----------------------------------------------------------------------
+
+def test_war_after_retire_introduces_no_dependency():
+    """A writer issued after the host retired the readers (and hence their
+    ancestors) must start a fresh frontier — no stale WAR edges."""
+    dag = ComputationDAG()
+    A = FakeArray("A")
+    k1 = ce(inout(A), name="K1")
+    k2 = ce(const(A), name="K2")
+    dag.add(k1)
+    dag.add(k2)
+    dag.retire(k2)                  # host observed K2 (and ancestor K1)
+    k3 = ce(inout(A), name="K3")
+    dag.add(k3)
+    assert k3.parents == []
+    assert k3.active and k3 in dag.frontier
+
+
+def test_inout_self_dependency_is_impossible():
+    """An element reading and writing the same array (even via duplicate
+    args) must never become its own parent."""
+    dag = ComputationDAG()
+    A = FakeArray("A")
+    k1 = ce(const(A), inout(A), name="K1")
+    dag.add(k1)
+    assert k1 not in k1.parents and k1.parents == []
+    k2 = ce(inout(A), const(A), name="K2")
+    dag.add(k2)
+    assert k2 not in k2.parents and k2.parents == [k1]
+
+
+def test_reader_then_writer_arg_order_on_same_element():
+    """const(A) before out(A) on one element merges to the writing mode:
+    downstream readers see it as the last writer, and the element consumes
+    the previous frontier exactly once."""
+    dag = ComputationDAG()
+    A = FakeArray("A")
+    k1 = ce(out(A), name="K1")
+    dag.add(k1)
+    rw = ce(const(A), out(A), name="RW")
+    dag.add(rw)
+    assert rw.parents == [k1]
+    assert id(A) not in k1.dep_set      # consumed by the write exactly once
+    k3 = ce(const(A), name="K3")
+    dag.add(k3)
+    assert k3.parents == [rw]
+
+
+def test_dead_state_is_evicted_in_long_loops():
+    """Satellite fix: per-array frontier state must not grow without bound
+    when a serving loop touches a fresh array per episode."""
+    dag = ComputationDAG()
+    for i in range(5000):
+        e = ce(inout(FakeArray(f"t{i}")), name=f"K{i}")
+        dag.add(e)
+        dag.retire(e)
+    assert len(dag._state) < 1024
+
+
+def test_managed_keys_are_id_reuse_proof():
+    """ManagedArray-style handles key the frontier by a monotonic aid mapped
+    into a namespace disjoint from id() — a recycled address can never alias
+    a dead array's state."""
+    from repro.core import dep_key
+
+    class Managed:
+        _next = [0]
+
+        def __init__(self):
+            self.aid = Managed._next[0]
+            Managed._next[0] += 1
+
+    a, b = Managed(), Managed()
+    assert dep_key(a) != dep_key(b)
+    assert dep_key(a) < 0 and dep_key(b) < 0
+    plain = FakeArray("p")
+    assert dep_key(plain) == id(plain) >= 0
+
+
+def test_snapshot_is_frozen_and_reflects_live_frontier():
+    dag = ComputationDAG()
+    A, B = FakeArray("A"), FakeArray("B")
+    k1 = ce(inout(A), name="K1")
+    k2 = ce(const(A), out(B), name="K2")
+    dag.add(k1)
+    dag.add(k2)
+    snap = dag.snapshot()
+    assert snap.writers[id(A)] is k1
+    assert snap.readers[id(A)] == (k2,)
+    with pytest.raises(TypeError):
+        snap.writers[id(B)] = k1            # read-only mapping
+    dag.retire_all()
+    snap2 = dag.snapshot()
+    assert not snap2.writers and not snap2.frontier
+    assert snap.frontier                     # old snapshot unchanged
+
+
+# ----------------------------------------------------------------------
 # Property-based validation against a sequential-consistency oracle.
 # ----------------------------------------------------------------------
 
@@ -201,3 +300,26 @@ def test_dependency_closure_matches_hazard_oracle(prog):
             eb, sb = elements[j]
             if ea in eb.parents:
                 assert hazard(sa, sb), "spurious direct edge between hazard-free elements"
+
+
+@settings(max_examples=60, deadline=None)
+@given(programs())
+def test_frontier_empty_after_retire_all(prog):
+    """After retire_all, no element stays active, the frontier is empty and
+    a subsequent element can inherit no dependencies."""
+    n_arrays, ops = prog
+    arrays = [FakeArray(f"a{i}") for i in range(n_arrays)]
+    dag = ComputationDAG()
+    added = []
+    for spec in ops:
+        args = tuple({"const": const, "inout": inout, "out": out}[m](arrays[i])
+                     for i, m in spec)
+        e = ComputationalElement(fn=None, args=args)
+        dag.add(e)
+        added.append(e)
+    dag.retire_all()
+    assert not dag.frontier
+    assert all(not e.active for e in added)
+    probe = ce(*[inout(a) for a in arrays], name="probe")
+    dag.add(probe)
+    assert probe.parents == []
