@@ -1,0 +1,70 @@
+"""Multi-tenant QoS benchmark (simulated): priority-weighted space-sharing
+vs the priority-blind baseline under latency-vs-bulk contention.
+
+For 1-3 simulated GPUs, runs the benchsuite contention scenario twice —
+``blind`` (every element priority 0) and ``weighted`` (latency tenant at
+priority 3 = 8x capacity weight) — and reports the latency tenant's p99
+completion latency, the bulk tenant's makespan and the aggregate makespan.
+
+Acceptance targets (ISSUE 3): weighted p99 for the latency tenant improves
+>= 2x over blind while aggregate makespan regresses <= 10%.  Results land in
+``BENCH_multitenant.json`` so the trajectory is machine-readable across PRs.
+"""
+from __future__ import annotations
+
+import json
+
+from repro.benchsuite.multitenant import (BULK_TENANT, LATENCY_TENANT,
+                                          build_contention)
+from repro.core import make_scheduler
+
+from .common import emit
+
+DEVICES = (1, 2, 3)
+
+
+def run_contention(num_devices: int, weighted: bool, **kw):
+    s = make_scheduler("parallel", simulate=True, num_devices=num_devices,
+                       placement="min-load")
+    build_contention(s, use_priority=weighted, **kw)
+    s.sync()
+    ts = s.tenant_stats()
+    return {
+        "makespan_s": s.timeline.makespan,
+        "latency_p99_s": ts[LATENCY_TENANT]["latency_p99_s"],
+        "latency_p50_s": ts[LATENCY_TENANT]["latency_p50_s"],
+        "latency_queue_p99_s": ts[LATENCY_TENANT]["queue_delay_p99_s"],
+        "bulk_makespan_s": ts[BULK_TENANT]["makespan_s"],
+        "priority_bypasses": s.stats().get("priority_bypasses", 0),
+    }
+
+
+def main(smoke: bool = False) -> list:
+    kw = ({"bulk_kernels": 3, "latency_streams": 1, "per_stream": 3,
+           "n": 1 << 10} if smoke else {})
+    rows, result = [], {}
+    for nd in DEVICES if not smoke else (1,):
+        blind = run_contention(nd, weighted=False, **kw)
+        wtd = run_contention(nd, weighted=True, **kw)
+        improvement = blind["latency_p99_s"] / wtd["latency_p99_s"]
+        mk_ratio = wtd["makespan_s"] / blind["makespan_s"]
+        result[f"{nd}dev"] = {"blind": blind, "weighted": wtd,
+                              "latency_p99_improvement": improvement,
+                              "makespan_ratio": mk_ratio}
+        rows.append((f"multitenant/{nd}dev/blind",
+                     blind["latency_p99_s"] * 1e6,
+                     f"makespan_us={blind['makespan_s'] * 1e6:.1f}"))
+        rows.append((f"multitenant/{nd}dev/weighted",
+                     wtd["latency_p99_s"] * 1e6,
+                     f"p99_improvement={improvement:.2f} "
+                     f"makespan_ratio={mk_ratio:.3f}"))
+    if not smoke:
+        with open("BENCH_multitenant.json", "w") as f:
+            json.dump(result, f, indent=2, sort_keys=True)
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    main(smoke="--smoke" in sys.argv)

@@ -11,8 +11,8 @@ import traceback
 
 def main() -> None:
     from . import (bench_capture, bench_contention, bench_hwmetrics,
-                   bench_memory, bench_multidevice, bench_oracle,
-                   bench_overlap, bench_roofline, bench_speedup)
+                   bench_memory, bench_multidevice, bench_multitenant,
+                   bench_oracle, bench_overlap, bench_roofline, bench_speedup)
 
     suites = [
         ("Fig.7 speedup-vs-serial", bench_speedup),
@@ -25,6 +25,7 @@ def main() -> None:
         ("Table.I memory", bench_memory),
         ("Roofline (dry-run)", bench_roofline),
         ("Multi-device scaling", bench_multidevice),
+        ("Multi-tenant QoS (BENCH_multitenant.json)", bench_multitenant),
     ]
     failed = []
     for title, mod in suites:

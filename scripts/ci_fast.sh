@@ -7,4 +7,8 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 # Capture/replay fast path first: a focused signal before the full sweep
 # (these also run as part of the suite below).
 python -m pytest -q tests/test_capture.py
+# Multi-tenant QoS smoke: tiny contention scenario, priority weighting on
+# vs off, plus the thread-safe submission pipeline tests.
+python -m benchmarks.bench_multitenant --smoke
+python -m pytest -q tests/test_multitenant.py
 exec python -m pytest -q -m "not slow" "$@"

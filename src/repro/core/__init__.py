@@ -1,6 +1,7 @@
 """GrJAX core: the paper's runtime DAG scheduler (see DESIGN.md §1-2)."""
-from .element import (AccessMode, Arg, ComputationalElement, ElementKind,
-                      const, dep_key, inout, kernel, out)
+from .element import (AccessMode, Arg, ComputationalElement, DEFAULT_TENANT,
+                      ElementKind, PRIORITY_WEIGHT_BASE, const, dep_key,
+                      inout, kernel, out, priority_weight)
 from .dag import ComputationDAG, DAGSnapshot
 from .capture import (CaptureContext, ExecutionPlan, PlanCache, PlanElement,
                       SlotSpec)
@@ -8,6 +9,7 @@ from .streams import (DataAffinityPlacement, Lane, MinLoadPlacement,
                       NewStreamPolicy, ParentStreamPolicy, PlacementPolicy,
                       PLACEMENT_POLICIES, RoundRobinPlacement, StreamManager)
 from .managed import ManagedArray
+from .submission import SubmissionPipeline
 from .timeline import Timeline, Span
 from .history import KernelHistory
 from .executor import (Executor, SimExecutor, SimHardware,
@@ -15,8 +17,10 @@ from .executor import (Executor, SimExecutor, SimHardware,
 from .scheduler import GrScheduler, make_scheduler
 
 __all__ = [
-    "AccessMode", "Arg", "ComputationalElement", "ElementKind",
-    "const", "dep_key", "inout", "kernel", "out",
+    "AccessMode", "Arg", "ComputationalElement", "DEFAULT_TENANT",
+    "ElementKind", "PRIORITY_WEIGHT_BASE",
+    "const", "dep_key", "inout", "kernel", "out", "priority_weight",
+    "SubmissionPipeline",
     "ComputationDAG", "DAGSnapshot",
     "CaptureContext", "ExecutionPlan", "PlanCache", "PlanElement", "SlotSpec",
     "NewStreamPolicy", "ParentStreamPolicy", "StreamManager",

@@ -37,8 +37,8 @@ from dataclasses import dataclass, field
 from typing import (Any, Callable, Dict, List, Mapping, Optional, Sequence,
                     Tuple)
 
-from .element import (AccessMode, Arg, ComputationalElement, ElementKind,
-                      dep_key)
+from .element import (AccessMode, Arg, ComputationalElement, DEFAULT_TENANT,
+                      ElementKind, dep_key)
 
 _PLAN_IDS = itertools.count()
 
@@ -137,6 +137,11 @@ class PlanElement:
     src_device: Optional[int]
     parents: Tuple[int, ...]                   # plan indices (in-trace only)
     wait_events: Tuple[int, ...]               # cross-lane parents -> events
+    # QoS tags are part of the structural signature: an episode re-issued at
+    # a different priority (or by a different tenant) records its own plan,
+    # so replay always reproduces the captured capacity weighting.
+    priority: int = 0
+    tenant: str = DEFAULT_TENANT
 
 
 @dataclass(frozen=True)
@@ -247,6 +252,8 @@ class _Draft:
     parents: Tuple[int, ...]
     fn: Optional[Callable] = None
     raw_config: dict = field(default_factory=dict)
+    priority: int = 0
+    tenant: str = DEFAULT_TENANT
 
 
 def _assign_plan_lanes(drafts: Sequence[_Draft]):
@@ -342,7 +349,8 @@ class _Recorder:
             arg_slots=arg_slots,
             device=e.device if e.device is not None else 0,
             src_device=e.src_device, parents=parents, fn=e.fn,
-            raw_config=dict(e.config)))
+            raw_config=dict(e.config),
+            priority=e.priority, tenant=e.tenant))
 
     def build(self, name: str) -> Optional[ExecutionPlan]:
         if not any(d.kind is ElementKind.KERNEL for d in self.drafts):
@@ -352,7 +360,8 @@ class _Recorder:
             index=d.index, kind=d.kind, name=d.name, config=d.config,
             cost_s=d.cost_s, transfer_bytes=d.transfer_bytes,
             arg_slots=d.arg_slots, lane=lane, device=d.device,
-            src_device=d.src_device, parents=d.parents, wait_events=events)
+            src_device=d.src_device, parents=d.parents, wait_events=events,
+            priority=d.priority, tenant=d.tenant)
             for d, (lane, events) in zip(self.drafts, placed))
         return ExecutionPlan(
             name=name, key=f"{name}#{next(_PLAN_IDS)}",
@@ -391,13 +400,16 @@ class _ReplayState:
 
 def _match_kernel(plan: ExecutionPlan, kpos: int, bound: List[Any],
                   bound_keys: Dict[int, int], args: Sequence[Arg],
-                  name: str, cfg_items: Tuple, cost_s: float
+                  name: str, cfg_items: Tuple, cost_s: float,
+                  priority: int = 0, tenant: str = DEFAULT_TENANT
                   ) -> Optional[Dict[int, Any]]:
     """Check one user launch against the plan's next kernel.  Returns the
     new slot bindings on a match, None on any mismatch."""
     pe = plan.elements[plan.kernel_positions[kpos]]
     if pe.name != name or pe.config != cfg_items or pe.cost_s != cost_s:
         return None
+    if pe.priority != priority or pe.tenant != tenant:
+        return None     # QoS retag: record a fresh plan with the new weights
     if len(args) != len(pe.arg_slots):
         return None
     new_bind: Dict[int, Any] = {}
@@ -474,7 +486,8 @@ def _flush_range(sched, r: _ReplayState, hi_inclusive: int,
         ce = ComputationalElement(
             fn=fn, args=args, kind=pe.kind, name=pe.name,
             config=dict(plan.configs[idx]), cost_s=pe.cost_s,
-            transfer_bytes=pe.transfer_bytes)
+            transfer_bytes=pe.transfer_bytes,
+            priority=pe.priority, tenant=pe.tenant)
         ce.device = pe.device
         ce.src_device = pe.src_device
         parents = [r.new_elements[p] for p in pe.parents]
@@ -708,7 +721,8 @@ class CaptureContext:
             self.recorder.blocked = True
 
     def offer(self, fn: Optional[Callable], args: Sequence[Arg], name: str,
-              config: dict, cost_s: float) -> Optional[ComputationalElement]:
+              config: dict, cost_s: float, priority: int = 0,
+              tenant: str = DEFAULT_TENANT) -> Optional[ComputationalElement]:
         """Called by ``GrScheduler.launch`` before the eager path.  Returns
         the replayed element on a plan hit, or None to fall through (the
         eager path then records when in record mode)."""
@@ -721,7 +735,8 @@ class CaptureContext:
             # hold several signatures under one name (e.g. batch shapes).
             for plan in self.candidates:
                 bind = _match_kernel(plan, 0, [None] * len(plan.slots), {},
-                                     args, name, cfg_items, cost_s)
+                                     args, name, cfg_items, cost_s,
+                                     priority, tenant)
                 if bind is not None:
                     self.replay = r = _ReplayState(self.sched, plan)
                     return self._commit(r, bind, fn)
@@ -733,7 +748,8 @@ class CaptureContext:
             bind = None             # plan exhausted but episode continues
         else:
             bind = _match_kernel(r.plan, r.kpos, r.bound, r.bound_keys,
-                                 args, name, cfg_items, cost_s)
+                                 args, name, cfg_items, cost_s,
+                                 priority, tenant)
         if bind is None:
             # Divergence: drop the stale plan, transplant the replayed
             # prefix into a recording, and let the eager path trace the

@@ -20,6 +20,24 @@ from typing import Any, Callable, Optional, Sequence, Tuple
 
 _ELEMENT_IDS = itertools.count()
 
+# Priority -> space-sharing weight mapping (multi-tenant QoS).  Each priority
+# level doubles the element's claim on contended device capacity: the
+# SimExecutor water-fill hands a kernel ``weight/Σweights`` of the device
+# (still capped by its parallel fraction), so priority 3 work progresses 8x
+# faster than priority 0 work *only while they contend* — an idle device runs
+# everything at full rate regardless.
+PRIORITY_WEIGHT_BASE = 2.0
+
+DEFAULT_TENANT = "default"
+
+
+def priority_weight(priority: int) -> float:
+    """Capacity weight of a priority level (``base ** priority``).
+
+    Negative priorities yield sub-unit weights: true background work that
+    cedes the device to any default-priority tenant under contention."""
+    return float(PRIORITY_WEIGHT_BASE ** priority)
+
 
 class AccessMode(enum.Enum):
     """Argument annotations (paper §IV-D: ``input``/``const``/``output``).
@@ -97,6 +115,13 @@ class ComputationalElement:
     # benchsuite or measured by the history tracker.
     cost_s: float = 0.0
     transfer_bytes: int = 0
+    # Multi-tenant QoS: who issued this element and how urgent it is.
+    # Auto-inserted TRANSFER/D2D elements inherit both from the kernel that
+    # triggered them; ``priority`` feeds the weighted water-fill and the
+    # priority-aware lane fallback, ``tenant`` feeds per-tenant accounting
+    # and (optional) lane quotas.
+    priority: int = 0
+    tenant: str = DEFAULT_TENANT
 
     # -- filled in by the scheduler --
     uid: int = field(default_factory=lambda: next(_ELEMENT_IDS))
@@ -110,8 +135,14 @@ class ComputationalElement:
     active: bool = False
     done_event: Any = None             # executor-specific completion handle
     # timeline bookkeeping (filled by executors)
+    t_issue: float = float("nan")      # submission time (queueing-delay base)
     t_start: float = float("nan")
     t_end: float = float("nan")
+
+    @property
+    def weight(self) -> float:
+        """Space-sharing weight derived from ``priority``."""
+        return priority_weight(self.priority)
 
     def __post_init__(self) -> None:
         if not self.name:
@@ -149,11 +180,13 @@ class ComputationalElement:
 
 
 def kernel(fn: Callable, *args: Arg, name: str = "", cost_s: float = 0.0,
-           transfer_bytes: int = 0, **config) -> ComputationalElement:
+           transfer_bytes: int = 0, priority: int = 0,
+           tenant: str = DEFAULT_TENANT, **config) -> ComputationalElement:
     """Convenience constructor for a device kernel element."""
     return ComputationalElement(fn=fn, args=tuple(args), kind=ElementKind.KERNEL,
                                 name=name, config=config, cost_s=cost_s,
-                                transfer_bytes=transfer_bytes)
+                                transfer_bytes=transfer_bytes,
+                                priority=priority, tenant=tenant)
 
 
 def const(array: Any) -> Arg:

@@ -21,8 +21,9 @@ from __future__ import annotations
 import queue
 import threading
 import time
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Deque, Dict, List, Optional
 
 import numpy as np
 
@@ -36,6 +37,12 @@ class Executor:
 
     timeline: Timeline
     history: KernelHistory
+    # True when per-element wait() only blocks on a completion handle and
+    # touches no shared executor state — the scheduler may then drop its
+    # submission-pipeline lock while waiting, so one tenant's host read
+    # cannot stall other tenants' launches (priority-inversion guard).
+    # The simulator advances a shared clock in wait(), so it stays False.
+    concurrent_waits = False
 
     def submit(self, element: ComputationalElement, lane_id: int,
                wait_parents: List[ComputationalElement]) -> None:
@@ -146,7 +153,9 @@ class _LaneWorker(threading.Thread):
                         else "d2d" if element.kind is ElementKind.D2D
                         else "compute")
                 self.executor.timeline.record(
-                    element.uid, element.name, kind, self.lane_id, t0, t1)
+                    element.uid, element.name, kind, self.lane_id, t0, t1,
+                    tenant=element.tenant, priority=element.priority,
+                    t_issue=element.t_issue)
                 if element.kind is ElementKind.KERNEL:
                     self.executor.history.record(
                         element.name, element.config, t1 - t0)
@@ -158,6 +167,8 @@ class _LaneWorker(threading.Thread):
 
 
 class ThreadLaneExecutor(Executor):
+    concurrent_waits = True     # wait() is a pure event wait
+
     def __init__(self, num_devices: int = 1) -> None:
         self.timeline = Timeline()
         self.history = KernelHistory()
@@ -192,6 +203,7 @@ class ThreadLaneExecutor(Executor):
     def submit(self, element, lane_id, wait_parents) -> None:
         element.done_event = threading.Event()
         element.error = None
+        element.t_issue = self.host_now()
         self._submitted.append(element)
         self._worker(lane_id).q.put((element, list(wait_parents)))
 
@@ -202,6 +214,7 @@ class ThreadLaneExecutor(Executor):
         for element, _, _ in items:
             element.done_event = threading.Event()
             element.error = None
+            element.t_issue = self.host_now()
         for element, lane_id, waits in items:
             self._submitted.append(element)
             self._worker(lane_id).q.put((element, list(waits)))
@@ -277,6 +290,7 @@ class _SimTask:
     src_device: int = 0         # D2D only: device the copy reads from
     rate: float = 0.0
     t_start: float = float("nan")
+    weight: float = 1.0         # priority weight for the capacity water-fill
 
 
 class SimExecutor(Executor):
@@ -291,7 +305,10 @@ class SimExecutor(Executor):
         self._pending: List[_SimTask] = []
         self._running: List[_SimTask] = []
         self._end: Dict[int, float] = {}   # uid -> completion time
-        self._lane_q: Dict[int, List[int]] = {}   # lane -> uid queue (order)
+        # Lane queues complete strictly in head order (_try_start admits only
+        # the head), so a deque with popleft keeps completion O(1) instead of
+        # list.remove's O(n) — O(n^2) per episode on long serving lanes.
+        self._lane_q: Dict[int, Deque[int]] = {}  # lane -> uid queue (order)
 
     # -- host clock ----------------------------------------------------
     def host_now(self) -> float:
@@ -335,9 +352,11 @@ class SimExecutor(Executor):
         task = _SimTask(element=element, kind=kind, work=work, remaining=work,
                         pf=pf, lane=lane_id, issue_t=self.host_time,
                         device=min(element.device or 0, top),
-                        src_device=min(element.src_device or 0, top))
+                        src_device=min(element.src_device or 0, top),
+                        weight=element.weight)
+        element.t_issue = self.host_time
         self._pending.append(task)
-        self._lane_q.setdefault(lane_id, []).append(element.uid)
+        self._lane_q.setdefault(lane_id, deque()).append(element.uid)
 
     # -- readiness & rates ---------------------------------------------
     def _parents_done(self, e: ComputationalElement) -> bool:
@@ -362,21 +381,27 @@ class SimExecutor(Executor):
         self._recompute_rates()
 
     def _recompute_rates(self) -> None:
-        # Water-fill each device's unit capacity across its kernels; a kernel
-        # holds allocation a<=pf and progresses at a/pf (its solo rate is 1.0).
+        # Priority-weighted water-fill of each device's unit capacity: a
+        # kernel's fair share is ``remaining * w/W`` (weight over total
+        # outstanding weight), still capped by its parallel fraction ``pf``;
+        # it progresses at a/pf (solo rate 1.0).  Kernels are visited in
+        # ascending pf/weight order so capacity a capped kernel cannot use
+        # spills to the rest — with equal weights this reduces exactly to the
+        # original unweighted progressive fill (ascending pf, share 1/n).
         by_dev: Dict[int, List[_SimTask]] = {}
         for t in self._running:
             if t.kind == "compute":
                 by_dev.setdefault(t.device, []).append(t)
         for comp in by_dev.values():
             remaining = 1.0
-            todo = sorted(comp, key=lambda t: t.pf)
-            n = len(todo)
+            todo = sorted(comp, key=lambda t: t.pf / max(t.weight, 1e-12))
+            total_w = sum(t.weight for t in todo)
             for t in todo:
-                a = min(t.pf, remaining / n) if n else 0.0
+                share = remaining * t.weight / total_w if total_w > 0 else 0.0
+                a = min(t.pf, share)
                 t.rate = (a / t.pf) if t.pf > 0 else 1.0
                 remaining -= a
-                n -= 1
+                total_w -= t.weight
         # One DMA engine per direction *per device*, FIFO at full bandwidth.
         for direction, bw in (("h2d", self.hw.h2d_gbps),
                               ("d2h", self.hw.d2h_gbps)):
@@ -445,8 +470,11 @@ class SimExecutor(Executor):
         e = t.element
         self._end[e.uid] = self.now
         e.t_start, e.t_end = t.t_start, self.now
-        self._lane_q[t.lane].remove(e.uid)
-        self.timeline.record(e.uid, e.name, t.kind, t.lane, t.t_start, self.now)
+        # Only the lane head may run, so the finishing task IS the head.
+        self._lane_q[t.lane].popleft()
+        self.timeline.record(e.uid, e.name, t.kind, t.lane, t.t_start, self.now,
+                             tenant=e.tenant, priority=e.priority,
+                             t_issue=t.issue_t)
         if t.kind == "compute":
             self.history.record(e.name, e.config, self.now - t.t_start)
         # Logical array-location bits are owned by the scheduler and were

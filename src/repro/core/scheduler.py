@@ -24,11 +24,12 @@ import numpy as np
 
 from .capture import CaptureContext, ExecutionPlan, PlanCache, replay_plan
 from .dag import ComputationDAG
-from .element import (AccessMode, Arg, ComputationalElement, ElementKind,
-                      const, dep_key, inout, out)
+from .element import (AccessMode, Arg, ComputationalElement, DEFAULT_TENANT,
+                      ElementKind, const, dep_key, inout, out)
 from .executor import Executor, SimExecutor, SimHardware, ThreadLaneExecutor
 from .managed import ManagedArray
 from .streams import NewStreamPolicy, ParentStreamPolicy, StreamManager
+from .submission import SubmissionPipeline
 from .timeline import Timeline
 
 # A replayed plan is submitted with a single reduced launch overhead — the
@@ -48,7 +49,8 @@ class GrScheduler:
                  plan_launch_overhead_s: Optional[float] = None,
                  max_lanes: Optional[int] = None,
                  num_devices: int = 1,
-                 placement: str = "round-robin") -> None:
+                 placement: str = "round-robin",
+                 tenant_quotas: Optional[Mapping[str, int]] = None) -> None:
         assert policy in ("serial", "parallel")
         self.policy = policy
         self.num_devices = max(1, num_devices)
@@ -58,7 +60,8 @@ class GrScheduler:
         self.streams = StreamManager(new_stream_policy, parent_stream_policy,
                                      max_lanes=max_lanes,
                                      num_devices=self.num_devices,
-                                     placement=placement)
+                                     placement=placement,
+                                     tenant_quotas=tenant_quotas)
         self.auto_prefetch = auto_prefetch
         if launch_overhead_s is None:
             launch_overhead_s = 5e-6 if policy == "parallel" else 1e-6
@@ -70,6 +73,10 @@ class GrScheduler:
         self.d2d_transfers = 0
         self._elements: List[ComputationalElement] = []
         self._tune_counts: dict = {}
+        # Explicit, lock-protected submission path (place -> prefetch/D2D ->
+        # DAG-add -> lane-assign -> submit): multiple client threads may
+        # call launch()/host_read()/host_write()/sync() concurrently.
+        self.pipeline = SubmissionPipeline(self)
         # Graph capture & replay (capture.py): cached execution plans plus
         # the at-most-one active capture context.
         self.plan_cache = PlanCache()
@@ -91,59 +98,17 @@ class GrScheduler:
         e.t_start = e.t_end = self.executor.host_now()
 
     def _schedule(self, e: ComputationalElement) -> None:
-        """DAG insert + lane assignment + submission (parallel policy)."""
-        self.executor.host_overhead(self.launch_overhead_s)
-        self.dag.add(e)
-        lane, events = self.streams.assign(e, self.executor.is_done)
-        self.executor.submit(e, lane.lane_id, events)
-        self._elements.append(e)
-        if self._capture is not None:
-            self._capture.trace(e)
+        """DAG insert + lane assignment + submission (parallel policy).
 
-    def _prefetch_args(self, args: Sequence[Arg], device: int = 0) -> None:
-        """Insert asynchronous H2D transfers for host-resident read args."""
-        for a in args:
-            ma = a.array
-            if a.mode.reads and ma.host_valid and not ma.device_valid:
-                t = ComputationalElement(
-                    fn=None, args=(inout(ma),), kind=ElementKind.TRANSFER,
-                    name=f"h2d_{ma.name}", transfer_bytes=ma.nbytes)
-                t.device = device
-                if self.policy == "parallel":
-                    self._schedule(t)
-                else:
-                    self._run_serial(t)
-                # Logical location update at schedule time (see managed.py).
-                ma.device_valid = True
-                ma.device_id = device
-
-    def _insert_d2d(self, args: Sequence[Arg], device: int) -> None:
-        """Move device-resident read args owned by *other* devices onto
-        ``device`` via D2D transfer elements (single-copy ownership model:
-        the copy migrates, it is not replicated)."""
-        for a in args:
-            ma = a.array
-            if not a.mode.reads or not getattr(ma, "device_valid", False):
-                continue
-            src = getattr(ma, "device_id", None)
-            if src is None:
-                ma.device_id = device      # claim unowned device copies
-                continue
-            if src == device:
-                continue
-            t = ComputationalElement(
-                fn=None, args=(inout(ma),), kind=ElementKind.D2D,
-                name=f"d2d_{ma.name}", transfer_bytes=getattr(ma, "nbytes", 0))
-            t.device = device
-            t.src_device = src
-            self._schedule(t)
-            ma.device_id = device
-            self.d2d_transfers += 1
+        Thin alias kept for backward compatibility; the staged path lives in
+        :class:`~repro.core.submission.SubmissionPipeline`."""
+        self.pipeline.schedule(e)
 
     # ------------------------------------------------------------------
     def launch(self, fn: Optional[Callable], args: Sequence[Arg], *,
                name: str = "", cost_s: float = 0.0,
                tune: Optional[dict] = None,
+               priority: int = 0, tenant: str = DEFAULT_TENANT,
                **config) -> ComputationalElement:
         """Issue one kernel. Dependencies & lane are inferred automatically.
 
@@ -152,39 +117,42 @@ class GrScheduler:
         exploit the historically fastest (per-kernel history, §IV-A).  The
         chosen values are merged into ``config`` and passed to ``fn`` as
         keyword arguments when it accepts them.
+
+        ``priority``/``tenant`` tag the element (and its auto-inserted
+        transfers) for multi-tenant QoS: priority weights contended device
+        capacity and steers lane selection; tenant drives per-tenant stats
+        and optional lane quotas.  ``launch`` is thread-safe — concurrent
+        submitters serialize on the scheduler's submission pipeline.
         """
-        if tune:
-            config = dict(config, **self._tune(name, tune))
-        cap = self._capture
-        if cap is not None:
-            replayed = cap.offer(fn, tuple(args), name, config, cost_s)
-            if replayed is not None:
-                return replayed     # plan hit: submitted via the fast path
-        e = ComputationalElement(fn=fn, args=tuple(args),
-                                 kind=ElementKind.KERNEL, name=name,
-                                 config=config, cost_s=cost_s)
-        if self.policy == "parallel":
-            # Placement first: prefetches land on the consuming device and
-            # cross-device inputs get D2D copies before the kernel is added.
-            e.device = self.streams.place(e, self.executor.is_done)
-            if self.auto_prefetch:
-                self._prefetch_args(e.args, e.device)
-            if self.num_devices > 1:
-                self._insert_d2d(e.args, e.device)
-            self._schedule(e)
-        else:
-            if self.auto_prefetch:
-                self._prefetch_args(e.args)
-            self._run_serial(e)
-        # Logical location update at schedule time: the kernel's writable
-        # outputs will live on device; host copies become stale.
-        dev = e.device if e.device is not None else 0
-        for a in e.args:
-            if a.mode.writes:
-                a.array.device_valid = True
-                a.array.host_valid = False
-                a.array.device_id = dev
-        return e
+        with self.pipeline:
+            if tune:
+                config = dict(config, **self._tune(name, tune))
+            cap = self._capture
+            if cap is not None:
+                replayed = cap.offer(fn, tuple(args), name, config, cost_s,
+                                     priority=priority, tenant=tenant)
+                if replayed is not None:
+                    return replayed     # plan hit: submitted via the fast path
+            e = ComputationalElement(fn=fn, args=tuple(args),
+                                     kind=ElementKind.KERNEL, name=name,
+                                     config=config, cost_s=cost_s,
+                                     priority=priority, tenant=tenant)
+            if self.policy == "parallel":
+                self.pipeline.run(e)
+            else:
+                if self.auto_prefetch:
+                    self.pipeline.prefetch(e.args, priority=priority,
+                                           tenant=tenant)
+                self.pipeline.serial(e)
+            # Logical location update at schedule time: the kernel's writable
+            # outputs will live on device; host copies become stale.
+            dev = e.device if e.device is not None else 0
+            for a in e.args:
+                if a.mode.writes:
+                    a.array.device_valid = True
+                    a.array.host_valid = False
+                    a.array.device_id = dev
+            return e
 
     def _tune(self, name: str, tune: dict) -> dict:
         counts = self._tune_counts.setdefault(name, 0)
@@ -215,54 +183,72 @@ class GrScheduler:
                 return grid[0]
         return choice or grid[0]
 
-    def _run_serial(self, e: ComputationalElement) -> None:
-        """Original GrCUDA behaviour: blocking, in-order, single lane, no
-        dependency computation (overheads even smaller, §V-C)."""
-        self.executor.host_overhead(self.launch_overhead_s)
-        e.parents = []
-        self.executor.submit(e, 0, [])
-        self.executor.wait(e)
-        self._elements.append(e)
-
     # ------------------------------------------------------------------
     # Host accesses (ManagedArray callbacks) — paper §IV-A/B
     # ------------------------------------------------------------------
     def _sync_against(self, ma: ManagedArray, writes: bool) -> None:
-        deps = [d for d in self.dag.live_deps(dep_key(ma), writes)
-                if not d.is_host]
-        if deps and self._capture is not None:
-            self._capture.note_host_sync(deps)
-        if not deps:
-            return  # fast path: host access introduces no dependency (§IV-A)
-        e = ComputationalElement(
-            fn=None, args=(inout(ma) if writes else const(ma),),
-            kind=ElementKind.HOST_ACCESS, name=f"host_{ma.name}")
-        self.dag.add(e)
-        t0 = self.executor.host_now()
-        for p in e.parents:
-            if not p.is_host:
-                self.executor.wait(p)   # sync only the lanes owning this data
-        self.dag.retire(e)
-        for p in e.parents:
-            self.streams.release(p)
-        self._mark_host_done(e)
-        self.executor.record_host_span(e, t0, self.executor.host_now())
+        with self.pipeline:
+            deps = [d for d in self.dag.live_deps(dep_key(ma), writes)
+                    if not d.is_host]
+            if deps and self._capture is not None:
+                self._capture.note_host_sync(deps)
+            if not deps:
+                return  # fast path: host access introduces no dependency (§IV-A)
+            e = ComputationalElement(
+                fn=None, args=(inout(ma) if writes else const(ma),),
+                kind=ElementKind.HOST_ACCESS, name=f"host_{ma.name}")
+            self.dag.add(e)
+            t0 = self.executor.host_now()
+            waits = [p for p in e.parents if not p.is_host]
+            if not self.executor.concurrent_waits:
+                for p in waits:     # sync only the lanes owning this data
+                    self.executor.wait(p)
+                waits = []
+        # Real executor: block OUTSIDE the pipeline lock — a tenant waiting
+        # on its own slow kernel must not stall other tenants' launches
+        # (priority inversion).  wait() is a pure completion-event wait and
+        # the post-wait retire/release below are idempotent under the
+        # re-acquired lock, so a concurrent sync() racing us is harmless.
+        for p in waits:
+            self.executor.wait(p)
+        with self.pipeline:
+            self.dag.retire(e)
+            for p in e.parents:
+                self.streams.release(p)
+            self._mark_host_done(e)
+            self.executor.record_host_span(e, t0, self.executor.host_now())
+
+    def _sync_and_localize(self, ma: ManagedArray, writes: bool) -> None:
+        """Synchronize against the array's frontier, then (under the lock)
+        refresh its host copy.  Because _sync_against may wait with the lock
+        released, another tenant can slip a new writer in before the D2H —
+        copying then would tear the host buffer and mask the newer device
+        data behind host_valid=True, an outcome no serialization of the two
+        accesses could produce.  Re-validate the frontier under the lock and
+        re-sync until the gap stays clean."""
+        while True:
+            self._sync_against(ma, writes=writes)
+            with self.pipeline:
+                if any(not d.is_host
+                       for d in self.dag.live_deps(dep_key(ma), writes)):
+                    continue    # a racing launch re-dirtied the array
+                if ma.device_valid and not ma.host_valid:
+                    self._d2h(ma)
+                return
 
     def host_read(self, ma: ManagedArray) -> None:
-        self._sync_against(ma, writes=False)
-        if ma.device_valid and not ma.host_valid:
-            self._d2h(ma)
+        self._sync_and_localize(ma, writes=False)
 
     def host_write(self, ma: ManagedArray) -> None:
-        if self._capture is not None:
-            # A host write flips the array's logical location in a way a
-            # replaying plan cannot see (eager would re-prefetch the new
-            # host data); the capture context demotes the rest of the
-            # episode to eager execution when the array is plan-bound.
-            self._capture.note_host_write(ma)
-        self._sync_against(ma, writes=True)
-        if ma.device_valid and not ma.host_valid:
-            self._d2h(ma)  # read-modify-write safety for partial updates
+        with self.pipeline:
+            if self._capture is not None:
+                # A host write flips the array's logical location in a way a
+                # replaying plan cannot see (eager would re-prefetch the new
+                # host data); the capture context demotes the rest of the
+                # episode to eager execution when the array is plan-bound.
+                self._capture.note_host_write(ma)
+        # D2H before the write: read-modify-write safety for partial updates.
+        self._sync_and_localize(ma, writes=True)
 
     def _d2h(self, ma: ManagedArray) -> None:
         ex = self.executor
@@ -299,23 +285,38 @@ class GrScheduler:
         slot name or index; unbound slots reuse the captured arrays."""
         if self.policy != "parallel":
             raise RuntimeError("replay requires the parallel policy")
-        if self._capture is not None:
-            raise RuntimeError("cannot replay inside a capture context")
-        return replay_plan(self, plan, bindings)
+        with self.pipeline:
+            if self._capture is not None:
+                raise RuntimeError("cannot replay inside a capture context")
+            return replay_plan(self, plan, bindings)
 
     # ------------------------------------------------------------------
     def sync(self) -> None:
         """Full barrier: host waits for every in-flight computation."""
-        if self._capture is not None:
-            self._capture.note_host_sync(None)
-        self.executor.wait_all()
-        self.dag.retire_all()
-        for e in self._elements:
-            self.streams.release(e)
-        # Retired elements can never need another release; keeping them made
-        # every later sync re-walk (and re-release) the whole history —
-        # unbounded memory and O(n^2) cost in long-running serving loops.
-        self._elements.clear()
+        if self.executor.concurrent_waits:
+            # Drain outside the pipeline lock (same priority-inversion guard
+            # as _sync_against): one tenant's barrier must not freeze other
+            # tenants' launches while device work finishes.  The locked
+            # wait_all afterwards is near-instant unless new work raced in
+            # during the drain — which the barrier then also covers.
+            with self.pipeline:
+                if self._capture is not None:
+                    self._capture.note_host_sync(None)
+                pending = list(self._elements)
+            for e in pending:
+                self.executor.wait(e)
+        with self.pipeline:
+            if self._capture is not None and not self.executor.concurrent_waits:
+                self._capture.note_host_sync(None)
+            self.executor.wait_all()
+            self.dag.retire_all()
+            for e in self._elements:
+                self.streams.release(e)
+            # Retired elements can never need another release; keeping them
+            # made every later sync re-walk (and re-release) the whole
+            # history — unbounded memory and O(n^2) cost in long-running
+            # serving loops.
+            self._elements.clear()
 
     @property
     def timeline(self) -> Timeline:
@@ -326,9 +327,15 @@ class GrScheduler:
                 "elements": self.dag.num_elements,
                 "edges": self.dag.num_edges,
                 "d2d_transfers": self.d2d_transfers,
+                **self.pipeline.stats(),
                 **self.streams.stats(),
                 **self.executor.history.stats(),
                 **self.plan_cache.stats()}
+
+    def tenant_stats(self) -> dict:
+        """Per-tenant QoS metrics (makespan, queueing delay, completion
+        latency p50/p99) computed from the execution timeline."""
+        return self.timeline.tenant_stats()
 
     def shutdown(self) -> None:
         self.executor.shutdown()

@@ -61,10 +61,21 @@ class Lane:
         self.in_flight = [e for e in self.in_flight if not is_done(e)]
         return len(self.in_flight)
 
+    def serves(self, tenant: str) -> bool:
+        """Whether any in-flight element belongs to ``tenant`` (per-tenant
+        lane quotas count a shared lane for every tenant queued on it)."""
+        return any(e.tenant == tenant for e in self.in_flight)
+
     def load(self, is_done) -> float:
         """Cost-weighted outstanding work (used by min-load placement)."""
         self.pending(is_done)
         return sum(max(e.cost_s, 1e-6) for e in self.in_flight)
+
+    def min_priority(self) -> Optional[int]:
+        """Lowest priority currently queued on this lane (None when idle)."""
+        if not self.in_flight:
+            return None
+        return min(e.priority for e in self.in_flight)
 
 
 # ======================================================================
@@ -156,17 +167,26 @@ class StreamManager:
                  parent_stream_policy: ParentStreamPolicy = ParentStreamPolicy.FIRST_CHILD_INHERITS,
                  max_lanes: Optional[int] = None,
                  num_devices: int = 1,
-                 placement: Union[str, PlacementPolicy, None] = None) -> None:
+                 placement: Union[str, PlacementPolicy, None] = None,
+                 tenant_quotas: Optional[Dict[str, int]] = None) -> None:
         self.new_stream_policy = new_stream_policy
         self.parent_stream_policy = parent_stream_policy
         self.max_lanes = max_lanes
         self.num_devices = max(1, num_devices)
         self.placement = make_placement(placement)
+        # Optional per-tenant cap on concurrently *busy* lanes per device: a
+        # bulk tenant with a quota of 2 can keep at most 2 queues of work
+        # outstanding per device, however many elements it submits.
+        self.tenant_quotas: Dict[str, int] = dict(tenant_quotas or {})
         self.lanes: Dict[int, Lane] = {}
         self._free: Dict[int, deque] = {}    # device -> FIFO of idle lane ids
         self.lanes_created = 0
         self.events_created = 0
         self.events_cross_device = 0
+        self.priority_bypasses = 0   # saturated fallbacks that dodged a
+        #                              lower-priority lane tail
+        self.quota_fallbacks = 0     # submissions folded onto a tenant's own
+        #                              lanes because its quota was reached
         # plan key -> list of reserved lane-set instances, each mapping the
         # plan-local lane id to a real lane id (capture/replay, §V-D oracle).
         self._plan_lanes: Dict[str, List[Dict[int, int]]] = {}
@@ -194,7 +214,25 @@ class StreamManager:
         self.lanes_created += 1
         return lane
 
-    def _acquire_free_lane(self, is_done, device: int) -> Lane:
+    def _acquire_free_lane(self, is_done, device: int,
+                           element: Optional[ComputationalElement] = None
+                           ) -> Lane:
+        # Per-tenant quota: once the tenant occupies its full allowance of
+        # busy lanes on this device, fold the element onto the least-loaded
+        # of its *own* lanes instead of taking a free/new one — other
+        # tenants' concurrency is protected from a flooding submitter.
+        if element is not None and self.tenant_quotas:
+            quota = self.tenant_quotas.get(element.tenant)
+            if quota is not None:
+                # A lane counts toward the quota while ANY of the tenant's
+                # work is queued on it (not just the latest assignee — a
+                # shared lane must not silently drop out of the count).
+                own = [l for l in self.device_lanes(device)
+                       if not l.reserved and l.pending(is_done) > 0
+                       and l.serves(element.tenant)]
+                if len(own) >= max(1, quota):
+                    self.quota_fallbacks += 1
+                    return self._fallback_lane(own, element, is_done)
         free = self._free.setdefault(device, deque())
         if self.new_stream_policy is NewStreamPolicy.FIFO_REUSE:
             # Reclaim lanes whose queues drained (FIFO order, §IV-C).
@@ -214,9 +252,36 @@ class StreamManager:
         dev_lanes = [l for l in self.device_lanes(device) if not l.reserved]
         if (self.max_lanes is not None and dev_lanes
                 and len(dev_lanes) >= self.max_lanes):
-            # Saturated: fall back to the least-loaded lane on this device.
-            return min(dev_lanes, key=lambda l: l.pending(is_done))
+            # Saturated: fall back to a lane on this device, priority-aware.
+            return self._fallback_lane(dev_lanes, element, is_done)
         return self._new_lane(device)
+
+    def _fallback_lane(self, lanes: List[Lane],
+                       element: Optional[ComputationalElement],
+                       is_done) -> Lane:
+        """Pick an existing lane to queue on when no fresh lane is allowed.
+
+        Priority-aware: a lane whose queue holds *lower-priority* work would
+        make the element wait behind it (lane order is FIFO), so such lanes
+        are only chosen when every alternative is equally blocked; ties break
+        by shortest queue.  This is what keeps a latency-critical element
+        from parking behind a bulk tenant's queue under ``max_lanes``
+        saturation."""
+        prio = element.priority if element is not None else 0
+
+        def key(lane: Lane):
+            n = lane.pending(is_done)       # prunes finished elements first
+            mp = lane.min_priority()
+            blocked = mp is not None and mp < prio
+            return (blocked, n, lane.lane_id)
+
+        ranked = sorted(lanes, key=key)
+        best = ranked[0]
+        bmp = best.min_priority()
+        if any(l.min_priority() is not None and l.min_priority() < prio
+               for l in lanes) and not (bmp is not None and bmp < prio):
+            self.priority_bypasses += 1
+        return best
 
     # ------------------------------------------------------------------
     def assign(self, element: ComputationalElement,
@@ -256,33 +321,25 @@ class StreamManager:
                     break
 
         if lane is None:
-            lane = self._acquire_free_lane(is_done, device)
+            lane = self._acquire_free_lane(is_done, device, element)
 
         element.stream = lane.lane_id
         element.device = lane.device_id
         lane.in_flight.append(element)
-        inherited_tail = lane.last
         lane.last = element
 
-        # Events: every unfinished parent on a *different* lane, plus parents
-        # on this lane that are not the immediate tail (queue order already
-        # covers the tail and everything before it).
+        # Events: every unfinished parent on a *different* lane.  Same-lane
+        # parents — tail or not — were enqueued earlier on this FIFO lane,
+        # so queue order already covers them and no event is needed.
         events = []
         for p in parents:
-            if is_done(p):
+            if is_done(p) or p.stream == lane.lane_id:
                 continue
-            if p.stream == lane.lane_id and (p is inherited_tail or self._precedes(lane, p)):
-                continue  # ordered by the lane queue
             events.append(p)
             if p.device is not None and p.device != lane.device_id:
                 self.events_cross_device += 1
         self.events_created += len(events)
         return lane, events
-
-    @staticmethod
-    def _precedes(lane: Lane, p: ComputationalElement) -> bool:
-        # p scheduled earlier on the same lane => ordered without an event.
-        return p.stream == lane.lane_id
 
     # ------------------------------------------------------------------
     # Capture/replay: pre-reserved lane sets for execution plans (§V-D).
@@ -372,6 +429,10 @@ class StreamManager:
     def stats(self) -> dict:
         out = {"lanes_created": self.lanes_created,
                "events_created": self.events_created}
+        if self.priority_bypasses:
+            out["priority_bypasses"] = self.priority_bypasses
+        if self.tenant_quotas:
+            out["quota_fallbacks"] = self.quota_fallbacks
         if self._plan_lanes:
             out["plan_lane_sets"] = sum(len(v) for v in
                                         self._plan_lanes.values())

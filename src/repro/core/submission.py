@@ -1,0 +1,151 @@
+"""SubmissionPipeline — the explicit, lock-protected submission path.
+
+Historically the stages of issuing one computational element (device
+placement, argument prefetch, cross-device migration, DAG insertion, lane
+assignment, executor submission) were inlined across ``GrScheduler.launch``
+and ``GrScheduler._schedule``; correct only when a single host thread talked
+to the scheduler.  Multi-tenant serving has *concurrent* submitters, so the
+pipeline is now an explicit object with one re-entrant lock guarding every
+stage:
+
+    place -> prefetch (H2D) -> migrate (D2D) -> DAG-add -> lane-assign -> submit
+
+The lock is held across the whole pipeline for one element (plus the host
+synchronization paths), which keeps the paper's dependency inference sound
+under concurrency: the DAG frontier, the stream manager's lane table and the
+executor's clocks are only ever mutated by the lock holder.  Submissions from
+different threads serialize at the pipeline; the *executors* still overlap
+device work freely (that is the whole point of lanes).
+
+The pipeline is deliberately a thin, orderable object: each stage is a
+method, so subclasses (or tests) can instrument/override individual stages
+without re-implementing ``launch``.
+"""
+from __future__ import annotations
+
+import threading
+from typing import TYPE_CHECKING, List, Sequence, Set
+
+from .element import (Arg, ComputationalElement, DEFAULT_TENANT, ElementKind,
+                      inout)
+
+if TYPE_CHECKING:  # pragma: no cover
+    from .scheduler import GrScheduler
+
+
+class SubmissionPipeline:
+    """Serializes concurrent submitters onto one scheduler instance."""
+
+    def __init__(self, sched: "GrScheduler") -> None:
+        self.sched = sched
+        # RLock: host-access synchronization can nest inside a launch (e.g.
+        # a ManagedValue.get() issued from a tuning callback) and the public
+        # entry points wrap each other freely.
+        self._lock = threading.RLock()
+        self.submissions = 0
+        self._seen_threads: Set[int] = set()
+
+    # -- critical section ------------------------------------------------
+    def __enter__(self) -> "SubmissionPipeline":
+        self._lock.acquire()
+        self._seen_threads.add(threading.get_ident())
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        self._lock.release()
+        return False
+
+    # -- stages ----------------------------------------------------------
+    def run(self, e: ComputationalElement) -> None:
+        """Full pipeline for a kernel element under the parallel policy.
+
+        Caller must hold the pipeline lock (``with sched.pipeline:``)."""
+        sched = self.sched
+        # Placement first: prefetches land on the consuming device and
+        # cross-device inputs get D2D copies before the kernel is added.
+        e.device = sched.streams.place(e, sched.executor.is_done)
+        if sched.auto_prefetch:
+            self.prefetch(e.args, e.device, priority=e.priority,
+                          tenant=e.tenant)
+        if sched.num_devices > 1:
+            self.migrate(e.args, e.device, priority=e.priority,
+                         tenant=e.tenant)
+        self.schedule(e)
+
+    def prefetch(self, args: Sequence[Arg], device: int = 0, *,
+                 priority: int = 0, tenant: str = DEFAULT_TENANT) -> None:
+        """Insert asynchronous H2D transfers for host-resident read args.
+
+        The transfers inherit the consuming kernel's priority/tenant: a
+        latency-critical kernel's input upload must not be accounted (or
+        de-prioritized) as someone else's work."""
+        sched = self.sched
+        for a in args:
+            ma = a.array
+            if a.mode.reads and ma.host_valid and not ma.device_valid:
+                t = ComputationalElement(
+                    fn=None, args=(inout(ma),), kind=ElementKind.TRANSFER,
+                    name=f"h2d_{ma.name}", transfer_bytes=ma.nbytes,
+                    priority=priority, tenant=tenant)
+                t.device = device
+                if sched.policy == "parallel":
+                    self.schedule(t)
+                else:
+                    self.serial(t)
+                # Logical location update at schedule time (see managed.py).
+                ma.device_valid = True
+                ma.device_id = device
+
+    def migrate(self, args: Sequence[Arg], device: int, *,
+                priority: int = 0, tenant: str = DEFAULT_TENANT) -> None:
+        """Move device-resident read args owned by *other* devices onto
+        ``device`` via D2D transfer elements (single-copy ownership model:
+        the copy migrates, it is not replicated)."""
+        sched = self.sched
+        for a in args:
+            ma = a.array
+            if not a.mode.reads or not getattr(ma, "device_valid", False):
+                continue
+            src = getattr(ma, "device_id", None)
+            if src is None:
+                ma.device_id = device      # claim unowned device copies
+                continue
+            if src == device:
+                continue
+            t = ComputationalElement(
+                fn=None, args=(inout(ma),), kind=ElementKind.D2D,
+                name=f"d2d_{ma.name}", transfer_bytes=getattr(ma, "nbytes", 0),
+                priority=priority, tenant=tenant)
+            t.device = device
+            t.src_device = src
+            self.schedule(t)
+            ma.device_id = device
+            sched.d2d_transfers += 1
+
+    def schedule(self, e: ComputationalElement) -> None:
+        """DAG insert + lane assignment + submission (parallel policy)."""
+        sched = self.sched
+        sched.executor.host_overhead(sched.launch_overhead_s)
+        sched.dag.add(e)
+        lane, events = sched.streams.assign(e, sched.executor.is_done)
+        sched.executor.submit(e, lane.lane_id, events)
+        sched._elements.append(e)
+        self.submissions += 1
+        if sched._capture is not None:
+            sched._capture.trace(e)
+
+    def serial(self, e: ComputationalElement) -> None:
+        """Original GrCUDA behaviour: blocking, in-order, single lane, no
+        dependency computation (overheads even smaller, §V-C)."""
+        sched = self.sched
+        sched.executor.host_overhead(sched.launch_overhead_s)
+        e.parents = []
+        sched.executor.submit(e, 0, [])
+        sched.executor.wait(e)
+        sched._elements.append(e)
+        self.submissions += 1
+
+    # -- stats -----------------------------------------------------------
+    def stats(self) -> dict:
+        return {"pipeline_submissions": self.submissions,
+                "pipeline_threads_seen": len(self._seen_threads)}

@@ -23,10 +23,23 @@ class Span:
     lane: Optional[int]
     t0: float
     t1: float
+    # Multi-tenant QoS attribution (None/defaults for untagged spans).
+    tenant: Optional[str] = None
+    priority: int = 0
+    t_issue: float = float("nan")      # submission time; t0 - t_issue is the
+    #                                    span's queueing delay
 
     @property
     def dur(self) -> float:
         return self.t1 - self.t0
+
+    @property
+    def queue_delay(self) -> float:
+        return self.t0 - self.t_issue   # nan when t_issue was not recorded
+
+    @property
+    def latency(self) -> float:
+        return self.t1 - self.t_issue   # submit-to-completion (nan likewise)
 
 
 def _union(intervals: Iterable[Tuple[float, float]]) -> List[Tuple[float, float]]:
@@ -59,6 +72,17 @@ def _intersect(xs: List[Tuple[float, float]], ys: List[Tuple[float, float]]
     return out
 
 
+def _percentile(xs: List[float], q: float) -> float:
+    """Linear-interpolated percentile of ``xs`` (q in [0, 1])."""
+    if not xs:
+        return 0.0
+    ys = sorted(xs)
+    k = (len(ys) - 1) * q
+    lo = int(k)
+    hi = min(lo + 1, len(ys) - 1)
+    return ys[lo] + (ys[hi] - ys[lo]) * (k - lo)
+
+
 def _k_overlap(spans: List[Tuple[float, float]], k: int = 2
                ) -> List[Tuple[float, float]]:
     """Intervals where at least ``k`` of the given spans are active."""
@@ -84,8 +108,11 @@ class Timeline:
     spans: List[Span] = field(default_factory=list)
 
     def record(self, uid: int, name: str, kind: str, lane: Optional[int],
-               t0: float, t1: float) -> None:
-        self.spans.append(Span(uid, name, kind, lane, t0, t1))
+               t0: float, t1: float, *, tenant: Optional[str] = None,
+               priority: int = 0, t_issue: float = float("nan")) -> None:
+        self.spans.append(Span(uid, name, kind, lane, t0, t1,
+                               tenant=tenant, priority=priority,
+                               t_issue=t_issue))
 
     # ------------------------------------------------------------------
     def device_spans(self) -> List[Span]:
@@ -113,6 +140,34 @@ class Timeline:
         u_all = _union(allspans)
         tot = _measure(_k_overlap(allspans, 2)) / _measure(u_all) if allspans else 0.0
         return {"CT": ct, "TC": tc, "CC": cc, "TOT": tot}
+
+    def tenant_stats(self) -> Dict[str, Dict[str, float]]:
+        """Per-tenant QoS metrics over the device spans.
+
+        For each tenant that appears on the timeline: element count,
+        makespan (first start to last end of its spans), device-busy time,
+        mean/p99 queueing delay (span start minus submission) and p50/p99
+        submit-to-completion latency.  Spans recorded without a tenant tag
+        (host spans, pre-QoS callers) are excluded."""
+        per: Dict[str, List[Span]] = {}
+        for s in self.device_spans():
+            if s.tenant is not None:
+                per.setdefault(s.tenant, []).append(s)
+        out: Dict[str, Dict[str, float]] = {}
+        for tenant, spans in per.items():
+            lats = [s.latency for s in spans if s.latency == s.latency]
+            qds = [s.queue_delay for s in spans
+                   if s.queue_delay == s.queue_delay]
+            out[tenant] = {
+                "elements": float(len(spans)),
+                "makespan_s": max(s.t1 for s in spans) - min(s.t0 for s in spans),
+                "busy_s": _measure(_union([(s.t0, s.t1) for s in spans])),
+                "queue_delay_mean_s": (sum(qds) / len(qds)) if qds else 0.0,
+                "queue_delay_p99_s": _percentile(qds, 0.99),
+                "latency_p50_s": _percentile(lats, 0.50),
+                "latency_p99_s": _percentile(lats, 0.99),
+            }
+        return out
 
     def busy_time(self, kind: str) -> float:
         return _measure(_union([(s.t0, s.t1) for s in self.spans if s.kind == kind]))

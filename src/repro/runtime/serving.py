@@ -7,6 +7,14 @@ batches land on separate scheduler lanes and overlap (the paper's
 space-sharing applied to inference), while the shared read-only weights are
 tracked as a const dependency — exactly the two-branch pattern of Fig. 2.
 
+Multi-tenant QoS: ``submit(..., tenant=, priority=)`` tags each request.
+Batches are assembled per (shape, tenant, priority) and issued in
+**weighted-fair** order (stride scheduling — each tenant's virtual time
+advances by 1/weight per batch), and the underlying launches carry the tags
+so the scheduler's priority-weighted space-sharing and per-tenant stats see
+them.  ``submit`` and ``flush`` are thread-safe via the scheduler's
+submission pipeline lock.
+
 Per-slot ragged positions (token-level continuous batching) would need a
 vector-``pos`` decode mask; noted as future work in DESIGN.md.
 """
@@ -21,7 +29,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from ..core import GrScheduler, const, make_scheduler, out
+from ..core import (DEFAULT_TENANT, GrScheduler, const, make_scheduler, out,
+                    priority_weight)
 from ..core.managed import ManagedValue
 from ..models import init_cache
 from ..models.config import ArchConfig
@@ -33,6 +42,8 @@ class Request:
     rid: int
     tokens: np.ndarray            # (prompt_len,)
     new_tokens: int
+    tenant: str = DEFAULT_TENANT
+    priority: int = 0
     result: Optional[np.ndarray] = None
 
 
@@ -57,12 +68,17 @@ class ServingEngine:
         self._pending: List[tuple] = []
 
     # ------------------------------------------------------------------
-    def submit(self, tokens: np.ndarray, new_tokens: int = 0) -> Request:
-        req = Request(self._rid, np.asarray(tokens, np.int32),
-                      new_tokens or self.max_new)
-        self._rid += 1
-        self._queue.append(req)
-        return req
+    def submit(self, tokens: np.ndarray, new_tokens: int = 0, *,
+               tenant: str = DEFAULT_TENANT, priority: int = 0) -> Request:
+        """Queue one request.  ``tenant``/``priority`` drive weighted-fair
+        batch assembly and the scheduler's space-sharing weights."""
+        with self.sched.pipeline:
+            req = Request(self._rid, np.asarray(tokens, np.int32),
+                          new_tokens or self.max_new,
+                          tenant=tenant, priority=priority)
+            self._rid += 1
+            self._queue.append(req)
+            return req
 
     # ------------------------------------------------------------------
     def _batch_kernel(self, prompt_len: int, new_tokens: int):
@@ -85,34 +101,68 @@ class ServingEngine:
 
     def flush(self) -> None:
         """Assemble queued requests into fixed-shape batches and issue them
-        through the scheduler (each batch = one lane-schedulable element)."""
-        by_shape: Dict[tuple, List[Request]] = collections.defaultdict(list)
-        while self._queue:
-            r = self._queue.popleft()
-            by_shape[(len(r.tokens), r.new_tokens)].append(r)
-        for (plen, ntok), reqs in by_shape.items():
-            for i in range(0, len(reqs), self.batch):
-                group = reqs[i:i + self.batch]
-                toks = np.stack([r.tokens for r in group])
-                pad = self.batch - len(group)
-                if pad:  # fixed shapes -> no retracing
-                    toks = np.concatenate(
-                        [toks, np.zeros((pad, plen), np.int32)])
-                t_in = self.sched.array(toks, name=f"prompts_{group[0].rid}")
-                t_out = self.sched.array(
-                    np.zeros((self.batch, ntok), np.int32),
-                    name=f"gen_{group[0].rid}")
-                kernel = self._batch_kernel(plen, ntok)
-                args = [const(self.params_v), const(t_in), out(t_out)]
-                # NOTE: the element name is shape-keyed, not rid-keyed, so
-                # repeated same-shape batches match one cached plan (and the
-                # kernel history aggregates per shape).
-                name = f"serve_p{plen}_n{ntok}"
-                ctx = (self.sched.capture(name) if self.capture
-                       else contextlib.nullcontext())
-                with ctx:
-                    self.sched.launch(kernel, args, name=name)
-                self._pending.append((group, t_out))
+        through the scheduler (each batch = one lane-schedulable element).
+
+        Batches are formed per (shape, tenant, priority) and issued in
+        weighted-fair order: the tenant with the smallest virtual time goes
+        next, and issuing one batch advances its clock by ``1/weight`` —
+        priority-3 tenants therefore issue 8 batches for every priority-0
+        batch while both have work queued, yet nobody starves."""
+        with self.sched.pipeline:
+            by_key: Dict[tuple, List[Request]] = collections.defaultdict(list)
+            while self._queue:
+                r = self._queue.popleft()
+                by_key[(len(r.tokens), r.new_tokens,
+                        r.tenant, r.priority)].append(r)
+            # Per-tenant queue of ready batches, highest priority first (a
+            # tenant's priority-3 batch must not wait behind its own
+            # priority-0 batch; the stride charge below then uses the right
+            # weight) with shape as a deterministic tie-break.
+            ready: Dict[str, collections.deque] = {}
+            for (plen, ntok, tenant, prio), reqs in sorted(
+                    by_key.items(), key=lambda kv: (-kv[0][3], kv[0][:2])):
+                for i in range(0, len(reqs), self.batch):
+                    ready.setdefault(tenant, collections.deque()).append(
+                        (plen, ntok, prio, reqs[i:i + self.batch]))
+            if not ready:
+                return
+            # Stride scheduling over this flush's tenants.  Virtual time is
+            # per-flush: every flush drains the whole queue, so there is no
+            # standing backlog for cross-flush debt to arbitrate — and a
+            # persisted vtime would let a long-idle tenant return anchored
+            # to a stale minimum and claim an unbounded burst.
+            vt = {t: 0.0 for t in ready}
+            while any(ready.values()):
+                tenant = min((t for t in ready if ready[t]),
+                             key=lambda t: (vt[t], t))
+                plen, ntok, prio, group = ready[tenant].popleft()
+                vt[tenant] += 1.0 / priority_weight(prio)
+                self._issue_batch(plen, ntok, tenant, prio, group)
+
+    def _issue_batch(self, plen: int, ntok: int, tenant: str, prio: int,
+                     group: List[Request]) -> None:
+        toks = np.stack([r.tokens for r in group])
+        pad = self.batch - len(group)
+        if pad:  # fixed shapes -> no retracing
+            toks = np.concatenate(
+                [toks, np.zeros((pad, plen), np.int32)])
+        t_in = self.sched.array(toks, name=f"prompts_{group[0].rid}")
+        t_out = self.sched.array(
+            np.zeros((self.batch, ntok), np.int32),
+            name=f"gen_{group[0].rid}")
+        kernel = self._batch_kernel(plen, ntok)
+        args = [const(self.params_v), const(t_in), out(t_out)]
+        # NOTE: the element name is shape-keyed, not rid-keyed, so
+        # repeated same-shape batches match one cached plan (and the
+        # kernel history aggregates per shape).  Priority/tenant are part
+        # of the plan signature, so tenants never share a plan's weighting.
+        name = f"serve_p{plen}_n{ntok}"
+        ctx = (self.sched.capture(name) if self.capture
+               else contextlib.nullcontext())
+        with ctx:
+            self.sched.launch(kernel, args, name=name,
+                              priority=prio, tenant=tenant)
+        self._pending.append((group, t_out))
 
     def collect(self) -> List[Request]:
         """Host-reads each batch's output (syncing only its lane) and
@@ -128,3 +178,7 @@ class ServingEngine:
 
     def stats(self) -> dict:
         return self.sched.stats()
+
+    def tenant_stats(self) -> dict:
+        """Per-tenant QoS (makespan, queueing delay, latency p50/p99)."""
+        return self.sched.tenant_stats()

@@ -11,14 +11,19 @@ so disjoint submeshes genuinely execute in parallel.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, List, Optional
+from typing import TYPE_CHECKING, Callable, Dict, List, Optional
 
-import jax
 import numpy as np
-from jax.sharding import Mesh
 
 from ..core import GrScheduler, const, out
 from ..core.managed import ManagedValue
+
+if TYPE_CHECKING:  # pragma: no cover
+    from jax.sharding import Mesh
+
+# NOTE: jax / jax.sharding are imported lazily inside the functions that need
+# them (matching executor.py's in-function imports) so this module can be
+# imported — e.g. during offline test collection — on hosts without jax.
 
 
 class SubmeshPool:
@@ -26,10 +31,13 @@ class SubmeshPool:
 
     def __init__(self, devices=None, n_lanes: int = 2,
                  axis_names=("data", "model")) -> None:
+        import jax
+        from jax.sharding import Mesh
+
         devices = list(devices if devices is not None else jax.devices())
         assert len(devices) % n_lanes == 0, "devices must split evenly"
         per = len(devices) // n_lanes
-        self.meshes: List[Mesh] = []
+        self.meshes: List["Mesh"] = []
         for i in range(n_lanes):
             devs = np.asarray(devices[i * per:(i + 1) * per])
             self.meshes.append(Mesh(devs.reshape(-1, 1), axis_names))
@@ -37,7 +45,7 @@ class SubmeshPool:
     def __len__(self) -> int:
         return len(self.meshes)
 
-    def mesh(self, lane: int) -> Mesh:
+    def mesh(self, lane: int) -> "Mesh":
         return self.meshes[lane % len(self.meshes)]
 
 

@@ -100,6 +100,55 @@ def test_affinity_follows_input_bytes():
 
 
 # ----------------------------------------------------------------------
+# Placement policies under contention (asymmetric DAG)
+# ----------------------------------------------------------------------
+
+def _asymmetric_contended(placement):
+    """Two heavy bulk kernels contend with a short chain on a persistent
+    array A.  Costs are distinct so min-load comparisons never tie.
+
+    Launch order: bulk1 (5ms), warm-A (0.1ms), bulk2 (6ms), then two chain
+    hops on A (0.2ms each).  Returns (kernel devices, d2d count)."""
+    s = make_scheduler("parallel", simulate=True, num_devices=2,
+                       placement=placement)
+    ks = []
+    b1 = s.array(np.zeros(1 << 12, np.float32), name="b1")
+    ks.append(s.launch(None, [inout(b1)], name="bulk1", cost_s=5e-3))
+    A = s.array(np.zeros(1 << 12, np.float32), name="A")
+    ks.append(s.launch(None, [inout(A)], name="warmA", cost_s=1e-4))
+    b2 = s.array(np.zeros(1 << 12, np.float32), name="b2")
+    ks.append(s.launch(None, [inout(b2)], name="bulk2", cost_s=6e-3))
+    ks.append(s.launch(None, [inout(A)], name="hop1", cost_s=2e-4))
+    ks.append(s.launch(None, [inout(A)], name="hop2", cost_s=2e-4))
+    s.sync()
+    return [k.device for k in ks], s.stats()["d2d_transfers"]
+
+
+def test_affinity_keeps_contended_chain_local():
+    devices, d2d = _asymmetric_contended("affinity")
+    # bulk1 -> dev0 (fallback), warm/bulk2 -> dev1 (less loaded); the chain
+    # then follows A's bytes and never migrates.
+    assert devices == [0, 1, 1, 1, 1]
+    assert d2d == 0
+
+
+def test_min_load_migrates_contended_chain():
+    devices, d2d = _asymmetric_contended("min-load")
+    # bulk2 lands next to A (dev1 was less loaded), so min-load pulls the
+    # chain's first hop to the idle device despite locality: one migration.
+    assert devices == [0, 1, 1, 0, 0]
+    assert d2d == 1
+
+
+def test_round_robin_scatters_contended_chain():
+    devices, d2d = _asymmetric_contended("round-robin")
+    # Pure cycling: hop2's device differs from hop1's, dragging A across
+    # the link once even though nothing about load or locality asked for it.
+    assert devices == [0, 1, 0, 1, 0]
+    assert d2d == 1
+
+
+# ----------------------------------------------------------------------
 # D2D transfer elements
 # ----------------------------------------------------------------------
 

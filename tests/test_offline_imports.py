@@ -1,0 +1,41 @@
+"""Offline import guarantees: modules that only *use* jax lazily must be
+importable (e.g. for test collection) on a host where jax is absent."""
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_NOJAX_PROBE = """
+import sys, types, os
+
+class _BlockJax:
+    # Raising from find_spec makes any `import jax` fail exactly as it
+    # would on a host without the package installed.
+    def find_spec(self, name, path=None, target=None):
+        if name == "jax" or name.startswith("jax."):
+            raise ImportError("jax blocked for offline-import test")
+
+sys.meta_path.insert(0, _BlockJax())
+for m in [m for m in list(sys.modules) if m == "jax" or m.startswith("jax.")]:
+    del sys.modules[m]
+
+import repro.core            # lazy-jax by design (executors import in-function)
+import repro
+pkg = types.ModuleType("repro.runtime")
+pkg.__path__ = [os.path.join(os.path.dirname(repro.__file__), "runtime")]
+sys.modules["repro.runtime"] = pkg   # bypass runtime/__init__ (imports steps)
+
+import repro.runtime.spacesharing as sp
+assert hasattr(sp, "SubmeshPool") and hasattr(sp, "SpaceSharedRunner")
+print("NOJAX_IMPORT_OK")
+"""
+
+
+def test_spacesharing_imports_without_jax():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    proc = subprocess.run([sys.executable, "-c", _NOJAX_PROBE],
+                          capture_output=True, text=True, env=env, cwd=REPO)
+    assert proc.returncode == 0, proc.stderr
+    assert "NOJAX_IMPORT_OK" in proc.stdout

@@ -38,6 +38,107 @@ def test_serving_engine_batches_and_matches_direct_decode():
 
 
 # ----------------------------------------------------------------------
+# Multi-tenant QoS: weighted-fair batch assembly + tagged launches
+# ----------------------------------------------------------------------
+
+def _engine_shell(batch=2):
+    """ServingEngine shell without model compilation: enough state for
+    submit()/flush() ordering tests (issue step stubbed per-test)."""
+    from repro.core import make_scheduler
+    eng = ServingEngine.__new__(ServingEngine)
+    eng.batch = batch
+    eng.max_new = 4
+    eng.sched = make_scheduler("parallel", simulate=True)
+    eng.capture = False
+    eng._queue = __import__("collections").deque()
+    eng._rid = 0
+    eng._pending = []
+    return eng
+
+
+def test_weighted_fair_batch_assembly_order():
+    """Stride scheduling: a priority-3 tenant (weight 8) issues all its
+    batches before the priority-0 tenant's second batch, but the first
+    slot still honours the shared virtual-time floor (no starvation)."""
+    eng = _engine_shell(batch=2)
+    order = []
+    eng._issue_batch = lambda plen, ntok, tenant, prio, group: \
+        order.append((tenant, len(group)))
+    rng = np.random.RandomState(0)
+    for _ in range(6):      # 3 bulk batches
+        eng.submit(rng.randint(0, 100, 8), 4, tenant="bulk", priority=0)
+    for _ in range(6):      # 3 latency batches
+        eng.submit(rng.randint(0, 100, 8), 4, tenant="lat", priority=3)
+    eng.flush()
+    assert order == [("bulk", 2), ("lat", 2), ("lat", 2), ("lat", 2),
+                     ("bulk", 2), ("bulk", 2)]
+    # Virtual time is per-flush: a fresh flush starts both tenants level
+    # (no stale debt, no unbounded burst for a returning tenant).
+    order.clear()
+    for _ in range(2):
+        eng.submit(rng.randint(0, 100, 8), 4, tenant="bulk", priority=0)
+        eng.submit(rng.randint(0, 100, 8), 4, tenant="lat", priority=3)
+    eng.flush()
+    assert order == [("bulk", 2), ("lat", 2)]
+
+
+def test_tenant_high_priority_batch_issues_before_its_own_low():
+    """Within one tenant, the ready queue is priority-ordered: a priority-3
+    batch never waits behind the tenant's own priority-0 batch (and the
+    stride charge uses the high-priority weight first)."""
+    eng = _engine_shell(batch=2)
+    order = []
+    eng._issue_batch = lambda plen, ntok, tenant, prio, group: \
+        order.append(prio)
+    rng = np.random.RandomState(2)
+    eng.submit(rng.randint(0, 100, 8), 4, tenant="m", priority=0)
+    eng.submit(rng.randint(0, 100, 16), 4, tenant="m", priority=3)
+    eng.flush()
+    assert order == [3, 0]
+
+
+def test_weighted_fair_keeps_shape_batches_intact():
+    """Grouping by (shape, tenant, priority) must not mix tenants or
+    shapes inside one batch."""
+    eng = _engine_shell(batch=2)
+    seen = []
+    eng._issue_batch = lambda plen, ntok, tenant, prio, group: \
+        seen.append((plen, ntok, tenant, prio,
+                     [r.tenant for r in group], [len(r.tokens) for r in group]))
+    rng = np.random.RandomState(1)
+    eng.submit(rng.randint(0, 100, 8), 4, tenant="a", priority=0)
+    eng.submit(rng.randint(0, 100, 16), 4, tenant="a", priority=0)
+    eng.submit(rng.randint(0, 100, 8), 4, tenant="b", priority=1)
+    eng.flush()
+    assert len(seen) == 3                      # no cross-shape/tenant merge
+    for plen, ntok, tenant, prio, tenants, plens in seen:
+        assert all(t == tenant for t in tenants)
+        assert all(p == plen for p in plens)
+
+
+def test_serving_two_tenants_end_to_end():
+    """Full engine with two tenants: results stay correct, launches carry
+    the tags, and per-tenant stats are reported."""
+    cfg = get_config("qwen2_moe_a2_7b", reduced=True)
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    eng = ServingEngine(cfg, params, batch_size=2, max_new_tokens=4)
+    try:
+        rng = np.random.RandomState(0)
+        p = rng.randint(0, cfg.vocab, 12)
+        a = eng.submit(p, tenant="lat", priority=3)
+        b = eng.submit(p, tenant="bulk", priority=0)
+        eng.flush()
+        eng.collect()
+        # Same prompt, same greedy decode — tenancy must not change results.
+        np.testing.assert_array_equal(a.result, b.result)
+        ts = eng.tenant_stats()
+        assert {"lat", "bulk"} <= set(ts)
+        assert ts["lat"]["elements"] > 0 and ts["bulk"]["elements"] > 0
+    finally:
+        eng.sched.shutdown()
+
+
+# ----------------------------------------------------------------------
 # metamorphic properties of the overlap accounting (Fig. 10 math)
 # ----------------------------------------------------------------------
 

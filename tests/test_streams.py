@@ -141,6 +141,25 @@ def test_earlier_same_lane_parent_needs_no_event():
     assert events == []
 
 
+def test_non_tail_same_lane_parent_needs_no_event():
+    """Pins the simplified same-lane skip: a parent that is NOT the lane
+    tail (the element arrived via saturated fallback, not inheritance) is
+    still ordered by the lane's FIFO queue — no event."""
+    sm = StreamManager(max_lanes=1)
+    done = DoneSet()
+    p = ce(name="p", cost_s=1e-3)
+    sm.assign(p, done)
+    c1 = link(ce(name="c1", cost_s=1e-3), p)
+    sm.assign(c1, done)                     # inherits; lane queue [p, c1]
+    # r depends only on p, which now sits mid-queue; max_lanes=1 forces r
+    # onto the same lane via fallback.
+    r = link(ce(name="r"), p)
+    lane, events = sm.assign(r, done)
+    assert lane.lane_id == p.stream
+    assert events == []
+    assert sm.events_created == 0
+
+
 def test_finished_parent_needs_no_event():
     sm = StreamManager()
     done = DoneSet()
