@@ -1,0 +1,131 @@
+"""Per-launch API overhead: legacy ``s.launch`` vs ``GrFunction.__call__``
+vs captured replay.
+
+The frontend adds one Python layer (mode zipping, option resolution) on top
+of the submission engine; capture/replay removes the whole per-launch
+scheduling path.  This benchmark measures the *host-side wall-clock* cost
+per issued kernel for all three surfaces against the discrete-event
+simulator (so device time never pollutes the measurement), and writes
+``BENCH_api_overhead.json`` so the overhead trajectory is machine-readable
+across PRs.
+
+    python -m benchmarks.bench_api_overhead [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import time
+
+import numpy as np
+
+from repro.core import const, make_scheduler, out
+from repro.core.frontend import function
+
+from .common import emit
+
+N_ARRAYS = 4
+KERNELS_PER_EPISODE = 8     # chain pairs + reduce, see _issue_*
+COST_S = 1e-5
+
+STAGE = function(None, modes=("const", "out"), name="api_k", cost_s=COST_S)
+
+
+def _arrays(s, tag):
+    return [s.array(np.zeros(64, np.float32), name=f"{tag}_a{i}")
+            for i in range(N_ARRAYS)]
+
+
+def _issue_legacy(s, xs):
+    for k in range(KERNELS_PER_EPISODE):
+        src, dst = xs[k % 2], xs[2 + k % 2]
+        s.launch(None, [const(src), out(dst)], name=f"api_k{k}",
+                 cost_s=COST_S)
+
+
+def _issue_frontend(s, xs, fns):
+    for k in range(KERNELS_PER_EPISODE):
+        fns[k](xs[k % 2], xs[2 + k % 2], scheduler=s)
+
+
+def _episode_fns():
+    """One with_options variant per kernel position, resolved once (the
+    declare-once idiom: per-call rebinding is what legacy launch pays)."""
+    return [STAGE.with_options(name=f"api_k{k}")
+            for k in range(KERNELS_PER_EPISODE)]
+
+
+def run_mode(mode: str, episodes: int, warmup: int):
+    """Median (wall_us, sim_us) per issued kernel.
+
+    ``wall_us`` is host Python time spent in the call surface; ``sim_us``
+    is the simulated per-launch scheduling overhead the executor charged
+    (``launch_overhead_s`` eagerly, one plan-launch overhead per replayed
+    episode) — the deterministic cudaGraphLaunch-analogue saving."""
+    s = make_scheduler("parallel", simulate=True)
+    xs = _arrays(s, mode)
+    fns = _episode_fns()
+    wall, sim = [], []
+    for ep in range(warmup + episodes):
+        t0 = time.perf_counter()
+        t0s = s.executor.host_time
+        if mode == "legacy":
+            _issue_legacy(s, xs)
+        elif mode == "grfunction":
+            _issue_frontend(s, xs, fns)
+        else:                                   # captured replay
+            with s.capture("api_episode"):
+                _issue_frontend(s, xs, fns)
+        wall.append((time.perf_counter() - t0) / KERNELS_PER_EPISODE)
+        sim.append((s.executor.host_time - t0s) / KERNELS_PER_EPISODE)
+        s.sync()
+    if mode == "replay":
+        assert s.stats()["plan_replays"] >= episodes - 2, \
+            "capture stopped replaying: the fast path regressed"
+    return (statistics.median(wall[warmup:]) * 1e6,
+            statistics.median(sim[warmup:]) * 1e6)
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny run for CI (asserts the replay fast path)")
+    ap.add_argument("--episodes", type=int, default=None)
+    args = ap.parse_args(argv)
+    episodes = args.episodes or (20 if args.smoke else 200)
+    warmup = 3
+
+    result = {"kernels_per_episode": KERNELS_PER_EPISODE,
+              "episodes": episodes}
+    for mode in ("legacy", "grfunction", "replay"):
+        w, m = run_mode(mode, episodes, warmup)
+        result[f"{mode}_wall_us_per_launch"] = w
+        result[f"{mode}_sim_overhead_us_per_launch"] = m
+    result["grfunction_over_legacy_wall"] = (
+        result["grfunction_wall_us_per_launch"]
+        / result["legacy_wall_us_per_launch"])
+    result["replay_sim_overhead_speedup"] = (
+        result["grfunction_sim_overhead_us_per_launch"]
+        / result["replay_sim_overhead_us_per_launch"])
+    with open("BENCH_api_overhead.json", "w") as f:
+        json.dump(result, f, indent=2, sort_keys=True)
+    emit([(f"api_overhead/{m}", result[f"{m}_wall_us_per_launch"],
+           f"sim_overhead_us={result[f'{m}_sim_overhead_us_per_launch']:.2f}")
+          for m in ("legacy", "grfunction", "replay")])
+    emit([("api_overhead/ratios", 0.0,
+           f"grfunction_over_legacy_wall="
+           f"{result['grfunction_over_legacy_wall']:.2f},"
+           f"replay_sim_overhead_speedup="
+           f"{result['replay_sim_overhead_speedup']:.2f}")])
+    if args.smoke:
+        # The declared frontend must stay within a small constant factor of
+        # the legacy shim, and steady-state replay must collapse per-launch
+        # scheduling overhead (the deterministic, simulated metric).
+        assert result["grfunction_over_legacy_wall"] < 3.0, result
+        assert result["replay_sim_overhead_speedup"] > 4.0, result
+    return result
+
+
+if __name__ == "__main__":
+    main()

@@ -10,11 +10,14 @@ import traceback
 
 
 def main() -> None:
-    from . import (bench_capture, bench_contention, bench_hwmetrics,
-                   bench_memory, bench_multidevice, bench_multitenant,
-                   bench_oracle, bench_overlap, bench_roofline, bench_speedup)
+    from . import (bench_api_overhead, bench_capture, bench_contention,
+                   bench_hwmetrics, bench_memory, bench_multidevice,
+                   bench_multitenant, bench_oracle, bench_overlap,
+                   bench_roofline, bench_speedup)
 
     suites = [
+        ("API overhead: legacy vs GrFunction vs replay "
+         "(BENCH_api_overhead.json)", bench_api_overhead),
         ("Fig.7 speedup-vs-serial", bench_speedup),
         ("Fig.8 vs-hand-optimized", bench_oracle),
         ("Capture/replay vs eager vs oracle (BENCH_capture.json)",

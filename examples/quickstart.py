@@ -1,40 +1,43 @@
-"""Quickstart: the GrJAX runtime scheduler in 30 lines.
+"""Quickstart: the GrJAX polyglot frontend in 30 lines.
 
-Write plain sequential host code against managed arrays; the runtime infers
+Declare each kernel ONCE with its access modes (`gr.function`), enter an
+ambient runtime, and write plain sequential host code: the runtime infers
 the dependency DAG, assigns lanes (streams), inserts events, prefetches
-host-resident inputs, and overlaps everything it can — exactly the paper's
-programming model (Fig. 4), with JAX kernels.
+host-resident inputs, allocates declared outputs, and overlaps everything
+it can — exactly the paper's programming model (Fig. 4), with JAX kernels.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 import jax
 
-from repro.core import make_scheduler, const, inout, out
+import repro.api as gr
 
-sched = make_scheduler("parallel")
+# Declare once: access modes, output specs — never re-annotated at calls.
+square = gr.function(jax.jit(lambda x, _out: x * x),
+                     modes=("const", "out"), outputs=0, name="square")
+reduce_diff = gr.function(jax.jit(lambda a, b, _out: (a - b).sum()[None]),
+                          modes=("const", "const", "out"),
+                          outputs=((1,), np.float32), name="RED")
 
-# managed arrays (the UM-backed polyglot arrays of the paper)
-x1 = sched.array(np.random.rand(1 << 16).astype(np.float32), name="x1")
-x2 = sched.array(np.random.rand(1 << 16).astype(np.float32), name="x2")
-y1 = sched.array(shape=(1 << 16,), dtype=np.float32, name="y1")
-y2 = sched.array(shape=(1 << 16,), dtype=np.float32, name="y2")
-z = sched.array(shape=(1,), dtype=np.float32, name="z")
+with gr.runtime(policy="parallel") as sched:
+    # managed arrays (the UM-backed polyglot arrays of the paper)
+    x1 = gr.array(np.random.rand(1 << 16).astype(np.float32), name="x1")
+    x2 = gr.array(np.random.rand(1 << 16).astype(np.float32), name="x2")
 
-square = jax.jit(lambda x, _out: x * x)
-reduce_diff = jax.jit(lambda a, b, _out: (a - b).sum()[None])
+    # Plain function calls — the scheduler runs the two squares on separate
+    # lanes, prefetches x1/x2 asynchronously, serializes RED behind both,
+    # and allocates y1/y2/z from the declared output specs.
+    y1 = square(x1)
+    y2 = square(x2)
+    z = reduce_diff(y1, y2)
 
-# Plain sequential issue order — the scheduler runs SQ1 ∥ SQ2 on separate
-# lanes, prefetches x1/x2 asynchronously, and serializes RED behind both.
-sched.launch(square, [const(x1), out(y1)], name="SQ1")
-sched.launch(square, [const(x2), out(y2)], name="SQ2")
-sched.launch(reduce_diff, [const(y1), const(y2), out(z)], name="RED")
-
-print("z =", float(z[0]))               # host read -> syncs only RED's lane
-print("scheduler stats:", sched.stats())
-assert np.isclose(float(z[0]),
-                  float((np.asarray(y1) - np.asarray(y2)).sum()), rtol=1e-4)
-print("OK: two branches ran on",
-      len({e.stream for e in sched._elements if e.kind.value == 'kernel'}),
-      "lanes")
-sched.shutdown()
+    print("z =", float(z[0]))           # host read -> syncs only RED's lane
+    print("scheduler stats:", sched.stats())
+    assert np.isclose(float(z[0]),
+                      float((np.asarray(y1) - np.asarray(y2)).sum()),
+                      rtol=1e-4)
+    kernels = [e for e in sched._elements if e.kind.value == "kernel"]
+    print("OK: two branches ran on",
+          len({e.stream for e in kernels}), "lanes")
+    sched.shutdown()

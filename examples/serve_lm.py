@@ -6,17 +6,16 @@ multi-task overlap applied to inference).
     PYTHONPATH=src python examples/serve_lm.py --requests 4 --new-tokens 16
 """
 import argparse
-import dataclasses
 import time
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
+import repro.api as gr
 from repro.configs import get_config
-from repro.core import ManagedArray, const, inout, make_scheduler, out
 from repro.core.managed import ManagedValue
-from repro.models import forward_decode, forward_prefill, init_cache, init_lm
+from repro.models import init_cache, init_lm
 from repro.runtime import make_decode_step, make_prefill_step
 
 
@@ -34,24 +33,26 @@ def main() -> None:
     prefill = jax.jit(make_prefill_step(cfg))
     decode = jax.jit(make_decode_step(cfg))
 
-    sched = make_scheduler("parallel")
+    sched = gr.make_scheduler("parallel")
     params_v = ManagedValue(sched, params, name="weights")
     rng = np.random.RandomState(0)
     max_len = args.prompt_len + args.new_tokens
 
-    def serve_request(tokens, cache_and_out):
+    def kernel(p, toks, _out):
         """One request batch: prefill then greedy decode (device kernel)."""
-        def kernel(p, toks, _out):
-            cache = init_cache(cfg, toks.shape[0], max_len)
-            logits, cache = prefill(p, {"tokens": toks}, cache)
-            nxt = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-            outs = [nxt]
-            pos = toks.shape[1]
-            for i in range(args.new_tokens - 1):
-                nxt, _, cache = decode(p, nxt, cache, jnp.int32(pos + i))
-                outs.append(nxt)
-            return jnp.concatenate(outs, axis=1)
-        return kernel
+        cache = init_cache(cfg, toks.shape[0], max_len)
+        logits, cache = prefill(p, {"tokens": toks}, cache)
+        nxt = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        outs = [nxt]
+        pos = toks.shape[1]
+        for i in range(args.new_tokens - 1):
+            nxt, _, cache = decode(p, nxt, cache, jnp.int32(pos + i))
+            outs.append(nxt)
+        return jnp.concatenate(outs, axis=1)
+
+    # Declared once: const weights, const prompts, out generated tokens.
+    serve = gr.function(kernel, modes=("const", "const", "out"),
+                        name="serve", scheduler=sched)
 
     t0 = time.time()
     results = []
@@ -64,9 +65,7 @@ def main() -> None:
             np.zeros((args.batch, args.new_tokens), np.int32),
             name=f"gen{r}")
         # independent requests share read-only weights -> separate lanes
-        sched.launch(serve_request(toks, out_toks),
-                     [const(params_v), const(toks), out(out_toks)],
-                     name=f"serve_req{r}")
+        serve.with_options(name=f"serve_req{r}")(params_v, toks, out_toks)
         results.append(out_toks)
 
     texts = [np.asarray(r) for r in results]     # host reads sync per-lane

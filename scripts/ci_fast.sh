@@ -4,9 +4,19 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+# Lint first: imports + obvious errors only (scope and rules in ruff.toml).
+# The gate is advisory on hosts without ruff; CI always installs it.
+if command -v ruff >/dev/null 2>&1; then
+  ruff check .
+else
+  echo "[ci_fast] ruff not installed; skipping lint (CI runs it)"
+fi
 # Capture/replay fast path first: a focused signal before the full sweep
 # (these also run as part of the suite below).
 python -m pytest -q tests/test_capture.py
+# Frontend API overhead smoke: asserts GrFunction stays near the legacy
+# shim's cost and captured replay collapses per-launch overhead.
+python -m benchmarks.bench_api_overhead --smoke
 # Multi-tenant QoS smoke: tiny contention scenario, priority weighting on
 # vs off, plus the thread-safe submission pipeline tests.
 python -m benchmarks.bench_multitenant --smoke

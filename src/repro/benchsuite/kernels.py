@@ -164,3 +164,58 @@ def k_dense_embed(x, w, _out):
 def k_concat_dense(e1, e2, w, _out):
     h = jnp.concatenate([e1, e2], axis=1) @ w
     return 1.0 / (1.0 + jnp.exp(-h))
+
+
+# ======================================================================
+# Declared GrFunctions (the polyglot frontend surface, paper §III-IV)
+# ======================================================================
+# Access modes are declared exactly once, here with the kernel; the
+# benchmark builders then call these like plain functions — per-call
+# const/out annotation boilerplate is gone.  ``with_options`` attaches the
+# per-call cost model / occupancy / display name without forking identity.
+from ..core.frontend import function as _gr_function
+
+SQUARE = _gr_function(k_square, modes=("const", "out"), outputs=0,
+                      name="SQ")
+REDUCE_DIFF = _gr_function(k_reduce_diff, modes=("const", "const", "out"),
+                           name="RED")
+BLACK_SCHOLES = _gr_function(k_black_scholes, modes=("const", "out"),
+                             outputs=0, name="BS")
+BLUR_S = _gr_function(functools.partial(k_gaussian_blur, ksize=3, sigma=1.0),
+                      modes=("const", "out"), name="BLUR_S")
+BLUR_M = _gr_function(functools.partial(k_gaussian_blur, ksize=7, sigma=2.5),
+                      modes=("const", "out"), name="BLUR_M")
+BLUR_L = _gr_function(functools.partial(k_gaussian_blur, ksize=13, sigma=5.0),
+                      modes=("const", "out"), name="BLUR_L")
+SOBEL = _gr_function(k_sobel, modes=("const", "out"), name="SOBEL")
+EXTEND_MASK = _gr_function(k_extend_mask, modes=("const", "out"),
+                           name="EXTEND")
+UNSHARPEN = _gr_function(k_unsharpen, modes=("const", "const", "out"),
+                         name="UNSHARP")
+COMBINE = _gr_function(k_combine, modes=("const", "const", "const", "out"),
+                       name="COMBINE")
+COMBINE_LOW = _gr_function(k_combine_low,
+                           modes=("const", "const", "const", "out"),
+                           name="COMBINE_LOW")
+NB_SCORES = _gr_function(k_nb_scores,
+                         modes=("const", "const", "const", "out"), name="NB")
+RIDGE_SCORES = _gr_function(k_ridge_scores,
+                            modes=("const", "const", "const", "out"),
+                            name="RIDGE")
+SOFTMAX_NORM = _gr_function(k_softmax_norm, modes=("const", "out"),
+                            name="SOFTMAX")
+ENSEMBLE_AVG = _gr_function(k_ensemble_avg, modes=("const", "const", "out"),
+                            name="ARGMAX")
+SPMV = _gr_function(k_spmv,
+                    modes=("const", "const", "const", "const", "out"),
+                    name="SPMV")
+L2_NORM = _gr_function(k_l2_norm, modes=("const", "out"), name="NORM")
+DIVIDE = _gr_function(k_divide, modes=("const", "const", "inout"),
+                      name="DIV")
+CONV_RELU_POOL = _gr_function(k_conv_relu_pool,
+                              modes=("const", "const", "out"), name="CONV")
+DENSE_EMBED = _gr_function(k_dense_embed, modes=("const", "const", "out"),
+                           name="DENSE")
+CONCAT_DENSE = _gr_function(k_concat_dense,
+                            modes=("const", "const", "const", "out"),
+                            name="HEAD")

@@ -14,9 +14,9 @@ runtime must answer:
   hop — while data-affinity placement keeps each group on the device that
   owns its arrays and inserts (almost) no D2D traffic.
 
-Both builders issue plain sequential host code against a `GrScheduler`, the
-programming model of the paper's Fig. 4 — devices, lanes and D2D copies are
-entirely the runtime's business.
+Both builders issue plain sequential host code through declared GrFunctions,
+the programming model of the paper's Fig. 4 — devices, lanes and D2D copies
+are entirely the runtime's business.
 """
 from __future__ import annotations
 
@@ -24,7 +24,14 @@ from typing import List
 
 import numpy as np
 
-from ..core import GrScheduler, const, inout, out
+from ..core import GrScheduler
+from ..core.frontend import function
+
+# Declared once; cost and display names attach per call.
+CHAIN_STAGE = function(None, modes=("const", "out"), name="td_k",
+                       parallel_fraction=1.0)
+INPLACE_STAGE = function(None, modes=("inout",), name="loc_k",
+                         parallel_fraction=1.0)
 
 
 def build_task_parallel(sched: GrScheduler, *, branches: int = 4,
@@ -36,14 +43,14 @@ def build_task_parallel(sched: GrScheduler, *, branches: int = 4,
     intra-device space-sharing cannot hide the serialization — speedup must
     come from using more devices.
     """
+    stage = CHAIN_STAGE.with_options(scheduler=sched, cost_s=cost_s)
     outs = []
     for b in range(branches):
         x = sched.array(np.zeros(n, np.float32), name=f"td_x{b}")
         for k in range(chain):
             y = sched.array(shape=(n,), dtype=np.float32,
                             name=f"td_y{b}_{k}")
-            sched.launch(None, [const(x), out(y)], name=f"td_k{b}_{k}",
-                         cost_s=cost_s, parallel_fraction=1.0)
+            stage.with_options(name=f"td_k{b}_{k}")(x, y)
             x = y
         outs.append(x)
     return outs
@@ -59,11 +66,11 @@ def build_locality_heavy(sched: GrScheduler, *, groups: int = 4,
     worst case for location-blind placement (each scattered hop drags the
     array across the link) and the best case for data affinity.
     """
+    stage = INPLACE_STAGE.with_options(scheduler=sched, cost_s=cost_s)
     outs = []
     for g in range(groups):
         x = sched.array(np.zeros(n, np.float32), name=f"loc_x{g}")
         for it in range(iters):
-            sched.launch(None, [inout(x)], name=f"loc_k{g}_{it}",
-                         cost_s=cost_s, parallel_fraction=1.0)
+            stage.with_options(name=f"loc_k{g}_{it}")(x)
         outs.append(x)
     return outs

@@ -21,9 +21,9 @@ the chain completes several times sooner while the bulk tenant, which only
 cares about aggregate makespan, finishes at essentially the same time
 (total work is conserved; the water-fill always hands out full capacity).
 
-Both builders issue plain sequential host code against a `GrScheduler`
+Both builders issue plain sequential host code through declared GrFunctions
 (the paper's Fig. 4 programming model); tenants, priorities and devices are
-entirely the runtime's business.
+call-scoped options — entirely the runtime's business.
 """
 from __future__ import annotations
 
@@ -31,10 +31,18 @@ from typing import List
 
 import numpy as np
 
-from ..core import GrScheduler, const, inout, out
+from ..core import GrScheduler
+from ..core.frontend import function
 
 BULK_TENANT = "bulk"
 LATENCY_TENANT = "latency"
+
+# Declared once: a full-occupancy in-place bulk kernel and a full-occupancy
+# streaming stage; QoS tags/cost attach per call via with_options.
+BULK_STAGE = function(None, modes=("inout",), name="mt_bulk",
+                      parallel_fraction=1.0)
+LATENCY_STAGE = function(None, modes=("const", "out"), name="mt_lat",
+                         parallel_fraction=1.0)
 
 
 def build_contention(sched: GrScheduler, *, bulk_kernels: int = 6,
@@ -44,21 +52,21 @@ def build_contention(sched: GrScheduler, *, bulk_kernels: int = 6,
                      use_priority: bool = True) -> List:
     """Issue the bulk flood first, then the latency tenant's chains."""
     lp = latency_priority if use_priority else 0
+    bulk = BULK_STAGE.with_options(scheduler=sched, cost_s=bulk_cost,
+                                   priority=0, tenant=BULK_TENANT)
+    lat = LATENCY_STAGE.with_options(scheduler=sched, cost_s=lat_cost,
+                                     priority=lp, tenant=LATENCY_TENANT)
     outs = []
     for b in range(bulk_kernels):
         x = sched.array(np.zeros(n, np.float32), name=f"mt_bulk{b}")
-        sched.launch(None, [inout(x)], name=f"mt_bulk_k{b}",
-                     cost_s=bulk_cost, parallel_fraction=1.0,
-                     priority=0, tenant=BULK_TENANT)
+        bulk.with_options(name=f"mt_bulk_k{b}")(x)
         outs.append(x)
     for s in range(latency_streams):
         x = sched.array(np.zeros(n, np.float32), name=f"mt_lat{s}")
         for k in range(per_stream):
             y = sched.array(shape=(n,), dtype=np.float32,
                             name=f"mt_lat{s}_{k}")
-            sched.launch(None, [const(x), out(y)], name=f"mt_lat_k{s}_{k}",
-                         cost_s=lat_cost, parallel_fraction=1.0,
-                         priority=lp, tenant=LATENCY_TENANT)
+            lat.with_options(name=f"mt_lat_k{s}_{k}")(x, y)
             x = y
         outs.append(x)
     return outs

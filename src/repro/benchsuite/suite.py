@@ -1,8 +1,10 @@
 """The paper's 6 task-parallel benchmarks (§V-B, Fig. 6) as GrJAX programs.
 
-Each benchmark issues plain sequential host code against a `GrScheduler` —
-no streams, no events, no dependency declarations — exactly the programming
-model of Fig. 4.  The runtime infers the DAG.
+Each benchmark issues plain sequential host code through the declared
+GrFunctions in ``kernels.py`` — no streams, no events, no per-call access
+annotations — exactly the programming model of Fig. 4.  The runtime infers
+the DAG; the per-call cost model (sim mode) rides along via
+``with_options``.
 
 Benchmarks run in two modes:
 * **real** (``gpu=None``): kernels execute on the local JAX backend; used by
@@ -13,13 +15,12 @@ Benchmarks run in two modes:
 """
 from __future__ import annotations
 
-import functools
 from typing import Dict, Optional
 
 import numpy as np
 
-from ..core import GrScheduler, const, inout, out
-from ..core.managed import ManagedArray
+from ..core import GrScheduler
+from ..core.frontend import GrFunction
 from . import kernels as K
 from .costmodel import GPUSpec, kernel_cost, occupancy
 
@@ -29,16 +30,18 @@ class Benchmark:
     fp64: bool = False
 
     # -- helpers --------------------------------------------------------
-    def _launch(self, sched: GrScheduler, fn, args, name: str, *,
-                flops: float, bytes_moved: float, gpu: Optional[GPUSpec],
+    def _launch(self, sched: GrScheduler, gf: GrFunction, arrays, name: str,
+                *, flops: float, bytes_moved: float, gpu: Optional[GPUSpec],
                 fp64: bool = False, parallelism: float = 1.0):
-        if gpu is None:
-            return sched.launch(fn, args, name=name)
-        return sched.launch(
-            fn, args, name=name,
-            cost_s=kernel_cost(gpu, flops, bytes_moved, fp64),
-            parallel_fraction=occupancy(gpu, flops, bytes_moved, fp64,
-                                        parallelism))
+        """Call one declared GrFunction (access modes live with the
+        declaration); in sim mode the analytic cost model is attached as a
+        call-scoped option."""
+        opts = {"scheduler": sched, "name": name}
+        if gpu is not None:
+            opts["cost_s"] = kernel_cost(gpu, flops, bytes_moved, fp64)
+            opts["parallel_fraction"] = occupancy(gpu, flops, bytes_moved,
+                                                  fp64, parallelism)
+        return gf.with_options(**opts)(*arrays)
 
     # -- interface -------------------------------------------------------
     def sizes(self, scale: float) -> dict:
@@ -85,12 +88,11 @@ class VEC(Benchmark):
             y1 = sched.array(shape=(n,), dtype=np.float32, name=f"y1_{it}")
             y2 = sched.array(shape=(n,), dtype=np.float32, name=f"y2_{it}")
             z = sched.array(shape=(1,), dtype=np.float32, name=f"z_{it}")
-            self._launch(sched, K.k_square, [const(x1), out(y1)], "SQ1",
+            self._launch(sched, K.SQUARE, [x1, y1], "SQ1",
                          flops=n, bytes_moved=8 * n, gpu=gpu)
-            self._launch(sched, K.k_square, [const(x2), out(y2)], "SQ2",
+            self._launch(sched, K.SQUARE, [x2, y2], "SQ2",
                          flops=n, bytes_moved=8 * n, gpu=gpu)
-            self._launch(sched, K.k_reduce_diff,
-                         [const(y1), const(y2), out(z)], "RED",
+            self._launch(sched, K.REDUCE_DIFF, [y1, y2, z], "RED",
                          flops=2 * n, bytes_moved=8 * n, gpu=gpu,
                          parallelism=0.5)
             zs.append(float(z[0]) if gpu is None else 0.0)
@@ -132,7 +134,7 @@ class BS(Benchmark):
                 n = data[f"s{i}"].shape[0]
                 s = sched.array(data[f"s{i}"] + it, name=f"s{i}_{it}")
                 o = sched.array(shape=(n,), dtype=np.float64, name=f"c{i}_{it}")
-                self._launch(sched, K.k_black_scholes, [const(s), out(o)],
+                self._launch(sched, K.BLACK_SCHOLES, [s, o],
                              f"BS{i}", flops=150 * n, bytes_moved=16 * n,
                              gpu=gpu, fp64=True)
                 res.append(o)
@@ -179,31 +181,26 @@ class IMG(Benchmark):
             sharp, edges, mask, comb, outp = (mk("sharp"), mk("edges"),
                                               mk("mask"), mk("comb"),
                                               mk("out"))
-            blur = lambda ks, sg: functools.partial(K.k_gaussian_blur,
-                                                    ksize=ks, sigma=sg)
-            self._launch(sched, blur(3, 1.0), [const(img), out(b_s)], "BLUR_S",
+            self._launch(sched, K.BLUR_S, [img, b_s], "BLUR_S",
                          flops=2 * 9 * hw, bytes_moved=8 * hw, gpu=gpu,
                          parallelism=0.55)
-            self._launch(sched, blur(7, 2.5), [const(img), out(b_m)], "BLUR_M",
+            self._launch(sched, K.BLUR_M, [img, b_m], "BLUR_M",
                          flops=2 * 49 * hw, bytes_moved=8 * hw, gpu=gpu,
                          parallelism=0.55)
-            self._launch(sched, blur(13, 5.0), [const(img), out(b_l)], "BLUR_L",
+            self._launch(sched, K.BLUR_L, [img, b_l], "BLUR_L",
                          flops=2 * 169 * hw, bytes_moved=8 * hw, gpu=gpu,
                          parallelism=0.55)
-            self._launch(sched, K.k_unsharpen,
-                         [const(img), const(b_s), out(sharp)], "UNSHARP",
+            self._launch(sched, K.UNSHARPEN, [img, b_s, sharp], "UNSHARP",
                          flops=4 * hw, bytes_moved=12 * hw, gpu=gpu)
-            self._launch(sched, K.k_sobel, [const(sharp), out(edges)], "SOBEL",
+            self._launch(sched, K.SOBEL, [sharp, edges], "SOBEL",
                          flops=24 * hw, bytes_moved=8 * hw, gpu=gpu,
                          parallelism=0.55)
-            self._launch(sched, K.k_extend_mask, [const(edges), out(mask)],
+            self._launch(sched, K.EXTEND_MASK, [edges, mask],
                          "EXTEND", flops=30 * hw, bytes_moved=8 * hw, gpu=gpu,
                          parallelism=0.55)
-            self._launch(sched, K.k_combine,
-                         [const(sharp), const(b_m), const(mask), out(comb)],
+            self._launch(sched, K.COMBINE, [sharp, b_m, mask, comb],
                          "COMBINE", flops=5 * hw, bytes_moved=16 * hw, gpu=gpu)
-            self._launch(sched, K.k_combine_low,
-                         [const(comb), const(b_l), const(mask), out(outp)],
+            self._launch(sched, K.COMBINE_LOW, [comb, b_l, mask, outp],
                          "COMBINE_LOW", flops=5 * hw, bytes_moved=16 * hw,
                          gpu=gpu)
             result = outp
@@ -266,22 +263,19 @@ class ML(Benchmark):
             pred = sched.array(shape=(n,), dtype=np.int32, name=f"pred_{it}")
             mm_fl, mm_by = 2 * n * f * c, 4 * (n * f + f * c + n * c)
             # NB: tall-matrix low-occupancy kernel (low IPC, §V-F) — slower.
-            self._launch(sched, K.k_nb_scores,
-                         [const(x), const(flp), const(lp), out(s1)], "NB",
+            self._launch(sched, K.NB_SCORES, [x, flp, lp, s1], "NB",
                          flops=4 * mm_fl, bytes_moved=2 * mm_by, gpu=gpu,
                          parallelism=0.25)
-            self._launch(sched, K.k_ridge_scores,
-                         [const(x), const(wr), const(br), out(s2)], "RIDGE",
+            self._launch(sched, K.RIDGE_SCORES, [x, wr, br, s2], "RIDGE",
                          flops=mm_fl, bytes_moved=mm_by, gpu=gpu,
                          parallelism=0.8)
-            self._launch(sched, K.k_softmax_norm, [const(s1), out(p1)],
+            self._launch(sched, K.SOFTMAX_NORM, [s1, p1],
                          "SOFTMAX1", flops=5 * n * c, bytes_moved=8 * n * c,
                          gpu=gpu, parallelism=0.7)
-            self._launch(sched, K.k_softmax_norm, [const(s2), out(p2)],
+            self._launch(sched, K.SOFTMAX_NORM, [s2, p2],
                          "SOFTMAX2", flops=5 * n * c, bytes_moved=8 * n * c,
                          gpu=gpu, parallelism=0.7)
-            self._launch(sched, K.k_ensemble_avg,
-                         [const(p1), const(p2), out(pred)], "ARGMAX",
+            self._launch(sched, K.ENSEMBLE_AVG, [p1, p2, pred], "ARGMAX",
                          flops=3 * n * c, bytes_moved=4 * n * c + 4 * n,
                          gpu=gpu)
             res = pred
@@ -338,28 +332,25 @@ class HITS(Benchmark):
         spmv_fl, spmv_by = 2 * nnz, 12 * nnz + 8 * n
         for it in range(iters):
             # a' = A^T h ; h' = A a   (read previous iterates concurrently)
-            self._launch(sched, K.k_spmv,
-                         [const(g["t_vals"]), const(g["t_cols"]),
-                          const(g["t_rows"]), const(hub), out(a_new)],
+            self._launch(sched, K.SPMV,
+                         [g["t_vals"], g["t_cols"], g["t_rows"], hub, a_new],
                          "SPMV_AT", flops=spmv_fl, bytes_moved=spmv_by,
                          gpu=gpu, parallelism=0.6)
-            self._launch(sched, K.k_spmv,
-                         [const(g["vals"]), const(g["cols"]), const(g["rows"]),
-                          const(auth), out(h_new)],
+            self._launch(sched, K.SPMV,
+                         [g["vals"], g["cols"], g["rows"], auth, h_new],
                          "SPMV_A", flops=spmv_fl, bytes_moved=spmv_by,
                          gpu=gpu, parallelism=0.6)
-            self._launch(sched, K.k_l2_norm, [const(a_new), out(a_nrm)],
+            self._launch(sched, K.L2_NORM, [a_new, a_nrm],
                          "NORM_A", flops=2 * n, bytes_moved=4 * n, gpu=gpu,
                          parallelism=0.4)
-            self._launch(sched, K.k_l2_norm, [const(h_new), out(h_nrm)],
+            self._launch(sched, K.L2_NORM, [h_new, h_nrm],
                          "NORM_H", flops=2 * n, bytes_moved=4 * n, gpu=gpu,
                          parallelism=0.4)
-            # writes back into `auth`/`hub`: WAR with this iteration's SpMVs
-            self._launch(sched, K.k_divide,
-                         [const(a_new), const(a_nrm), inout(auth)], "DIV_A",
+            # writes back into `auth`/`hub` (declared inout on DIVIDE):
+            # WAR with this iteration's SpMVs
+            self._launch(sched, K.DIVIDE, [a_new, a_nrm, auth], "DIV_A",
                          flops=n, bytes_moved=8 * n, gpu=gpu)
-            self._launch(sched, K.k_divide,
-                         [const(h_new), const(h_nrm), inout(hub)], "DIV_H",
+            self._launch(sched, K.DIVIDE, [h_new, h_nrm, hub], "DIV_H",
                          flops=n, bytes_moved=8 * n, gpu=gpu)
         outs = {"auth": np.asarray(auth).copy() if gpu is None else np.zeros(1),
                 "hub": np.asarray(hub).copy() if gpu is None else np.zeros(1)}
@@ -430,25 +421,25 @@ class DL(Benchmark):
                 e = sched.array(shape=(b, self.emb), dtype=np.float32,
                                 name=f"e{t}_{it}")
                 hw = side * side
-                self._launch(sched, K.k_conv_relu_pool,
-                             [const(x), const(w1), out(h1)], f"CONV1_{t}",
+                self._launch(sched, K.CONV_RELU_POOL,
+                             [x, w1, h1], f"CONV1_{t}",
                              flops=2 * b * self.c1 * 9 * hw,
                              bytes_moved=4 * b * (hw + self.c1 * hw // 4),
                              gpu=gpu, parallelism=0.65)
-                self._launch(sched, K.k_conv_relu_pool,
-                             [const(h1), const(w2), out(h2)], f"CONV2_{t}",
+                self._launch(sched, K.CONV_RELU_POOL,
+                             [h1, w2, h2], f"CONV2_{t}",
                              flops=2 * b * self.c2 * self.c1 * 9 * hw // 4,
                              bytes_moved=4 * b * self.c1 * hw // 2, gpu=gpu,
                              parallelism=0.65)
-                self._launch(sched, K.k_dense_embed,
-                             [const(h2), const(wd), out(e)], f"DENSE_{t}",
+                self._launch(sched, K.DENSE_EMBED,
+                             [h2, wd, e], f"DENSE_{t}",
                              flops=2 * b * flat * self.emb,
                              bytes_moved=4 * (b * flat + flat * self.emb),
                              gpu=gpu, parallelism=0.4)
                 embs.append(e)
             p = sched.array(shape=(b, 1), dtype=np.float32, name=f"p_{it}")
-            self._launch(sched, K.k_concat_dense,
-                         [const(embs[0]), const(embs[1]), const(wo), out(p)],
+            self._launch(sched, K.CONCAT_DENSE,
+                         [embs[0], embs[1], wo, p],
                          "HEAD", flops=2 * b * 2 * self.emb,
                          bytes_moved=4 * b * 2 * self.emb, gpu=gpu,
                          parallelism=0.2)

@@ -15,6 +15,8 @@ from .history import KernelHistory
 from .executor import (Executor, SimExecutor, SimHardware,
                        ThreadLaneExecutor)
 from .scheduler import GrScheduler, make_scheduler
+from .frontend import (GrFunction, NoActiveRuntimeError, current_runtime,
+                       function, get_runtime, runtime, set_runtime)
 
 __all__ = [
     "AccessMode", "Arg", "ComputationalElement", "DEFAULT_TENANT",
@@ -29,4 +31,6 @@ __all__ = [
     "ManagedArray", "Timeline", "Span", "KernelHistory",
     "Executor", "SimExecutor", "SimHardware", "ThreadLaneExecutor",
     "GrScheduler", "make_scheduler",
+    "GrFunction", "NoActiveRuntimeError", "current_runtime", "function",
+    "get_runtime", "runtime", "set_runtime",
 ]

@@ -142,6 +142,11 @@ class PlanElement:
     # so replay always reproduces the captured capacity weighting.
     priority: int = 0
     tenant: str = DEFAULT_TENANT
+    # Declared-function identity (GrFunction frontend).  Part of the
+    # signature: two declarations that happen to share a kernel name never
+    # alias each other's plans, while one declaration whose Python closure
+    # is re-created per episode keeps replaying the same plan.
+    fn_key: Optional[int] = None
 
 
 @dataclass(frozen=True)
@@ -254,6 +259,7 @@ class _Draft:
     raw_config: dict = field(default_factory=dict)
     priority: int = 0
     tenant: str = DEFAULT_TENANT
+    fn_key: Optional[int] = None
 
 
 def _assign_plan_lanes(drafts: Sequence[_Draft]):
@@ -350,7 +356,7 @@ class _Recorder:
             device=e.device if e.device is not None else 0,
             src_device=e.src_device, parents=parents, fn=e.fn,
             raw_config=dict(e.config),
-            priority=e.priority, tenant=e.tenant))
+            priority=e.priority, tenant=e.tenant, fn_key=e.fn_key))
 
     def build(self, name: str) -> Optional[ExecutionPlan]:
         if not any(d.kind is ElementKind.KERNEL for d in self.drafts):
@@ -361,7 +367,7 @@ class _Recorder:
             cost_s=d.cost_s, transfer_bytes=d.transfer_bytes,
             arg_slots=d.arg_slots, lane=lane, device=d.device,
             src_device=d.src_device, parents=d.parents, wait_events=events,
-            priority=d.priority, tenant=d.tenant)
+            priority=d.priority, tenant=d.tenant, fn_key=d.fn_key)
             for d, (lane, events) in zip(self.drafts, placed))
         return ExecutionPlan(
             name=name, key=f"{name}#{next(_PLAN_IDS)}",
@@ -401,7 +407,9 @@ class _ReplayState:
 def _match_kernel(plan: ExecutionPlan, kpos: int, bound: List[Any],
                   bound_keys: Dict[int, int], args: Sequence[Arg],
                   name: str, cfg_items: Tuple, cost_s: float,
-                  priority: int = 0, tenant: str = DEFAULT_TENANT
+                  priority: int = 0, tenant: str = DEFAULT_TENANT,
+                  device: Optional[int] = None,
+                  fn_key: Optional[int] = None
                   ) -> Optional[Dict[int, Any]]:
     """Check one user launch against the plan's next kernel.  Returns the
     new slot bindings on a match, None on any mismatch."""
@@ -410,6 +418,11 @@ def _match_kernel(plan: ExecutionPlan, kpos: int, bound: List[Any],
         return None
     if pe.priority != priority or pe.tenant != tenant:
         return None     # QoS retag: record a fresh plan with the new weights
+    if pe.fn_key != fn_key:
+        return None     # a different declared GrFunction (or legacy launch)
+    if device is not None and pe.device != device:
+        return None     # explicit device retarget: the recorded placement,
+        #                 lanes and D2D structure would all be wrong
     if len(args) != len(pe.arg_slots):
         return None
     new_bind: Dict[int, Any] = {}
@@ -487,7 +500,7 @@ def _flush_range(sched, r: _ReplayState, hi_inclusive: int,
             fn=fn, args=args, kind=pe.kind, name=pe.name,
             config=dict(plan.configs[idx]), cost_s=pe.cost_s,
             transfer_bytes=pe.transfer_bytes,
-            priority=pe.priority, tenant=pe.tenant)
+            priority=pe.priority, tenant=pe.tenant, fn_key=pe.fn_key)
         ce.device = pe.device
         ce.src_device = pe.src_device
         parents = [r.new_elements[p] for p in pe.parents]
@@ -722,8 +735,10 @@ class CaptureContext:
 
     def offer(self, fn: Optional[Callable], args: Sequence[Arg], name: str,
               config: dict, cost_s: float, priority: int = 0,
-              tenant: str = DEFAULT_TENANT) -> Optional[ComputationalElement]:
-        """Called by ``GrScheduler.launch`` before the eager path.  Returns
+              tenant: str = DEFAULT_TENANT, device: Optional[int] = None,
+              fn_key: Optional[int] = None
+              ) -> Optional[ComputationalElement]:
+        """Called by ``GrScheduler._launch`` before the eager path.  Returns
         the replayed element on a plan hit, or None to fall through (the
         eager path then records when in record mode)."""
         if self.mode != "match":
@@ -736,7 +751,7 @@ class CaptureContext:
             for plan in self.candidates:
                 bind = _match_kernel(plan, 0, [None] * len(plan.slots), {},
                                      args, name, cfg_items, cost_s,
-                                     priority, tenant)
+                                     priority, tenant, device, fn_key)
                 if bind is not None:
                     self.replay = r = _ReplayState(self.sched, plan)
                     return self._commit(r, bind, fn)
@@ -749,7 +764,7 @@ class CaptureContext:
         else:
             bind = _match_kernel(r.plan, r.kpos, r.bound, r.bound_keys,
                                  args, name, cfg_items, cost_s,
-                                 priority, tenant)
+                                 priority, tenant, device, fn_key)
         if bind is None:
             # Divergence: drop the stale plan, transplant the replayed
             # prefix into a recording, and let the eager path trace the

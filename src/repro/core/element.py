@@ -16,7 +16,7 @@ from __future__ import annotations
 import enum
 import itertools
 from dataclasses import dataclass, field
-from typing import Any, Callable, Optional, Sequence, Tuple
+from typing import Any, Callable, Optional, Tuple
 
 _ELEMENT_IDS = itertools.count()
 
@@ -122,6 +122,12 @@ class ComputationalElement:
     # and (optional) lane quotas.
     priority: int = 0
     tenant: str = DEFAULT_TENANT
+    # Declared-function identity (GrFunction frontend): launches issued
+    # through the same declared ``GrFunction`` share one ``fn_key`` even when
+    # the underlying Python callable is re-created per episode, and two
+    # different declarations never share one.  ``None`` for legacy
+    # ``scheduler.launch`` call sites; capture/replay keys plans by it.
+    fn_key: Optional[int] = None
 
     # -- filled in by the scheduler --
     uid: int = field(default_factory=lambda: next(_ELEMENT_IDS))

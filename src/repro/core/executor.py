@@ -22,8 +22,8 @@ import queue
 import threading
 import time
 from collections import deque
-from dataclasses import dataclass, field
-from typing import Callable, Deque, Dict, List, Optional
+from dataclasses import dataclass
+from typing import Deque, Dict, List, Optional
 
 import numpy as np
 

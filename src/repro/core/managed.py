@@ -75,11 +75,27 @@ class ManagedArray:
         self._scheduler.host_read(self)
         return self.host
 
+    def _host_overwrote(self) -> None:
+        """Location-bit update after the host mutated ``self.host``.
+
+        The device copy (if any) is now stale, and — crucially — no device
+        *owns* a valid copy anymore, so ``device_id`` must be cleared too.
+        Leaving it behind (the old behaviour) meant a write after a D2D
+        migration kept pointing at the last owning device: capture plans then
+        spuriously mismatched fresh arrays (whose ``device_id`` is None) and
+        the multi-device migrate stage could treat the dead copy as claimable
+        state.  On a never-transferred array this is a no-op: neither
+        ``device_valid`` nor ``device_id`` flips.
+        """
+        self.host_valid = True
+        if self.device_valid or self.device_id is not None:
+            self.device_valid = False
+            self.device_id = None
+
     def write(self, value) -> None:
         self._scheduler.host_write(self)
         self.host[...] = value
-        self.host_valid = True
-        self.device_valid = False
+        self._host_overwrote()
 
     def __array__(self, dtype=None):
         out = self.read()
@@ -91,8 +107,7 @@ class ManagedArray:
     def __setitem__(self, idx, value):
         self._scheduler.host_write(self)
         self.host[idx] = value
-        self.host_valid = True
-        self.device_valid = False
+        self._host_overwrote()
 
     def __repr__(self) -> str:  # pragma: no cover
         loc = "D" if self.device_valid else "-"

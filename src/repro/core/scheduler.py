@@ -17,15 +17,15 @@ from __future__ import annotations
 
 import itertools
 import threading
-import time
+import warnings
 from typing import Callable, List, Mapping, Optional, Sequence
 
 import numpy as np
 
 from .capture import CaptureContext, ExecutionPlan, PlanCache, replay_plan
 from .dag import ComputationDAG
-from .element import (AccessMode, Arg, ComputationalElement, DEFAULT_TENANT,
-                      ElementKind, const, dep_key, inout, out)
+from .element import (Arg, ComputationalElement, DEFAULT_TENANT, ElementKind,
+                      const, dep_key, inout, out)
 from .executor import Executor, SimExecutor, SimHardware, ThreadLaneExecutor
 from .managed import ManagedArray
 from .streams import NewStreamPolicy, ParentStreamPolicy, StreamManager
@@ -110,33 +110,68 @@ class GrScheduler:
                tune: Optional[dict] = None,
                priority: int = 0, tenant: str = DEFAULT_TENANT,
                **config) -> ComputationalElement:
-        """Issue one kernel. Dependencies & lane are inferred automatically.
+        """Deprecated shim over the submission engine (:meth:`_launch`).
 
-        ``tune={"param": [candidates...]}`` enables the paper's §VI
-        heuristic: explore each candidate launch config round-robin, then
-        exploit the historically fastest (per-kernel history, §IV-A).  The
-        chosen values are merged into ``config`` and passed to ``fn`` as
-        keyword arguments when it accepts them.
+        Per-call ``const/out/inout`` annotation is exactly the expert burden
+        the paper's polyglot API removes — declare a :class:`GrFunction`
+        once via ``repro.api.function`` (access modes, cost model and tuning
+        space live with the declaration) and call it like a plain function.
+        The shim stays for at least two more releases so downstream callers
+        and the tier-1 tests keep working; see README "Migrating from
+        ``s.launch``".
+        """
+        warnings.warn(
+            "GrScheduler.launch is deprecated: declare the kernel once with "
+            "repro.api.function(fn, modes=...) and call the GrFunction "
+            "directly", DeprecationWarning, stacklevel=2)
+        return self._launch(fn, args, name=name, cost_s=cost_s, tune=tune,
+                            priority=priority, tenant=tenant, **config)
+
+    def _launch(self, fn: Optional[Callable], args: Sequence[Arg], *,
+                name: str = "", cost_s: float = 0.0,
+                tune: Optional[dict] = None,
+                priority: int = 0, tenant: str = DEFAULT_TENANT,
+                device: Optional[int] = None,
+                fn_key: Optional[int] = None,
+                **config) -> ComputationalElement:
+        """Submission engine: issue one kernel, dependencies & lane inferred.
+
+        This is the single path behind ``GrFunction.__call__`` (and the
+        deprecated ``launch`` shim).  ``tune={"param": [candidates...]}``
+        enables the paper's §VI heuristic: explore each candidate launch
+        config round-robin, then exploit the historically fastest
+        (per-kernel history, §IV-A).
 
         ``priority``/``tenant`` tag the element (and its auto-inserted
         transfers) for multi-tenant QoS: priority weights contended device
         capacity and steers lane selection; tenant drives per-tenant stats
-        and optional lane quotas.  ``launch`` is thread-safe — concurrent
+        and optional lane quotas.  ``device`` pins placement to one device
+        (bypassing the placement policy); ``fn_key`` is the declared-function
+        identity capture plans are keyed by.  Thread-safe — concurrent
         submitters serialize on the scheduler's submission pipeline.
         """
         with self.pipeline:
             if tune:
                 config = dict(config, **self._tune(name, tune))
+            if device is not None:
+                # Clamp before capture matching: plans record the *clamped*
+                # placement, so an out-of-range pin must present the same
+                # value or identical episodes would re-record forever.
+                device = min(max(0, int(device)), self.num_devices - 1)
             cap = self._capture
             if cap is not None:
                 replayed = cap.offer(fn, tuple(args), name, config, cost_s,
-                                     priority=priority, tenant=tenant)
+                                     priority=priority, tenant=tenant,
+                                     device=device, fn_key=fn_key)
                 if replayed is not None:
                     return replayed     # plan hit: submitted via the fast path
             e = ComputationalElement(fn=fn, args=tuple(args),
                                      kind=ElementKind.KERNEL, name=name,
                                      config=config, cost_s=cost_s,
-                                     priority=priority, tenant=tenant)
+                                     priority=priority, tenant=tenant,
+                                     fn_key=fn_key)
+            if device is not None:
+                e.device = device       # clamped by the pipeline's run stage
             if self.policy == "parallel":
                 self.pipeline.run(e)
             else:

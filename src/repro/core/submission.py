@@ -24,7 +24,7 @@ without re-implementing ``launch``.
 from __future__ import annotations
 
 import threading
-from typing import TYPE_CHECKING, List, Sequence, Set
+from typing import TYPE_CHECKING, Sequence, Set
 
 from .element import (Arg, ComputationalElement, DEFAULT_TENANT, ElementKind,
                       inout)
@@ -63,7 +63,12 @@ class SubmissionPipeline:
         sched = self.sched
         # Placement first: prefetches land on the consuming device and
         # cross-device inputs get D2D copies before the kernel is added.
-        e.device = sched.streams.place(e, sched.executor.is_done)
+        # A caller-pinned device (GrFunction ``with_options(device=...)``)
+        # bypasses the placement policy but is clamped to the device count.
+        if e.device is None:
+            e.device = sched.streams.place(e, sched.executor.is_done)
+        else:
+            e.device = min(max(0, int(e.device)), sched.num_devices - 1)
         if sched.auto_prefetch:
             self.prefetch(e.args, e.device, priority=e.priority,
                           tenant=e.tenant)

@@ -7,7 +7,7 @@ training loop (DESIGN.md §3).
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict
 
 import numpy as np
 

@@ -15,13 +15,11 @@ import argparse
 import time
 
 import jax
-import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_config
 from repro.data import SyntheticTokenStream
 from repro.launch.mesh import make_mesh_for, make_production_mesh
-from repro.launch.specs import make_optimizer
 from repro.models import init_lm
 from repro.optim import AdamW
 from repro.runtime.steps import TrainState, make_train_step

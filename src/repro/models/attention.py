@@ -4,7 +4,6 @@ kernel on TPU (kernels/flash_attention) with a pure-jnp fallback elsewhere.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

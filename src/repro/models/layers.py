@@ -1,7 +1,6 @@
 """Shared neural layers: norms, rotary embeddings, MLP variants, inits."""
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

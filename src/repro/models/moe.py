@@ -31,7 +31,6 @@ def init_moe(key, cfg, dtype=jnp.float32):
         p["w_gate"] = normal_init(ks[3], (e.n_experts, d, e.d_ff_expert),
                                   dtype=dtype)
     if e.n_shared_experts:
-        import dataclasses
 
         class _C:  # minimal cfg view for the shared FFN
             mlp = cfg.mlp

@@ -9,8 +9,7 @@ dequant-update-requant each step; error stays bounded by the block scale.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, NamedTuple, Optional
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -21,8 +21,7 @@ module for deeper-than-HBM models.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Tuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

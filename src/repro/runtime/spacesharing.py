@@ -15,7 +15,8 @@ from typing import TYPE_CHECKING, Callable, Dict, List, Optional
 
 import numpy as np
 
-from ..core import GrScheduler, const, out
+from ..core import GrScheduler
+from ..core.frontend import GrFunction
 from ..core.managed import ManagedValue
 
 if TYPE_CHECKING:  # pragma: no cover
@@ -58,6 +59,12 @@ class SpaceSharedRunner:
         self.pool = pool
         self.sched = scheduler or GrScheduler(policy="parallel",
                                               max_lanes=len(pool))
+        # Declared identity per (name, arity): the per-submit closure below
+        # must be re-created (it binds this submit's fn and element), but
+        # re-minting a fresh GrFunction identity each time would make every
+        # captured episode re-record — replay matches on fn_key and always
+        # executes the *current* call's closure, so sharing the fid is safe.
+        self._task_ids: Dict[tuple, int] = {}
 
     def submit(self, fn: Callable, value_args: List, name: str = "task"):
         """fn(*device_values) -> result; runs on the lane's submesh."""
@@ -72,9 +79,13 @@ class SpaceSharedRunner:
             with mesh:
                 return fn(*ins)
 
-        kernel_elem = self.sched.launch(
-            kernel, [const(v) for v in value_args] + [out(result)],
-            name=name)
+        key = (name, len(value_args))
+        task = GrFunction(kernel,
+                          modes=("const",) * len(value_args) + ("out",),
+                          name=name, scheduler=self.sched,
+                          _fid=self._task_ids.get(key))
+        self._task_ids.setdefault(key, task.fid)
+        kernel_elem = task(*value_args, result)
         return result
 
     def gather(self, results):

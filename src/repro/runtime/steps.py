@@ -8,8 +8,7 @@ buffers and shardings are applied by the caller (launch/dryrun.py).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -6,7 +6,7 @@ import statistics
 import numpy as np
 import pytest
 
-from repro.core import (ExecutionPlan, const, inout, make_scheduler, out)
+from repro.core import const, inout, make_scheduler, out
 
 
 def _episode(s, n=1024, cost=1e-4, tag=""):

@@ -3,8 +3,7 @@ import numpy as np
 import pytest
 from _hypothesis_fallback import given, settings, st
 
-from repro.core import (ComputationDAG, ComputationalElement, ElementKind,
-                        const, inout, out)
+from repro.core import ComputationDAG, ComputationalElement, const, inout, out
 
 
 class FakeArray:

@@ -5,10 +5,8 @@ import pytest
 from _hypothesis_fallback import given, settings, st
 
 import jax
-import jax.numpy as jnp
 
-from repro.core import (GrScheduler, NewStreamPolicy, SimExecutor, SimHardware,
-                        const, inout, make_scheduler, out)
+from repro.core import const, inout, make_scheduler, out
 
 
 # ----------------------------------------------------------------------

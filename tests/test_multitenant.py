@@ -1,7 +1,6 @@
 """Multi-tenant QoS: priority-weighted space-sharing, priority-aware lane
 selection, tenant quotas, the thread-safe submission pipeline, per-tenant
 stats, and capture/replay of priority-tagged episodes (ISSUE 3)."""
-import collections
 import threading
 
 import numpy as np

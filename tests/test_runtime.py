@@ -9,8 +9,8 @@ import jax
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_config
-from repro.core import GrScheduler, SimExecutor, make_scheduler
-from repro.runtime import SimulatedFailure, TaskGraphTrainer
+from repro.core import GrScheduler, make_scheduler
+from repro.runtime import TaskGraphTrainer
 
 
 @pytest.fixture(scope="module")

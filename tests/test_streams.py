@@ -1,9 +1,8 @@
 """StreamManager unit tests: FIFO lane reclaim, max_lanes saturation,
 event accounting, and scheduler element retirement (§IV-C)."""
 import numpy as np
-import pytest
 
-from repro.core import (ComputationalElement, StreamManager, const, inout,
+from repro.core import (ComputationalElement, StreamManager, inout,
                         make_scheduler, out)
 
 
