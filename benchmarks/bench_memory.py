@@ -1,12 +1,52 @@
-"""Table I: benchmark memory footprints across input scales/GPUs."""
+"""Memory benchmarks: Table I footprints + the out-of-core spill scenario.
+
+Two parts:
+
+* **Table I** — benchmark memory footprints across input scales/GPUs
+  (which testbeds each workload fits in, unchanged from earlier PRs);
+* **Out-of-core** — the budgeted-memory acceptance run (ISSUE 5): the
+  benchsuite two-pass streaming scenario with working set ≈ 2× the device
+  budget, on the simulator (makespan vs the unlimited run) and on the real
+  executor (end-to-end correctness through spill + reload).  Results land
+  in ``BENCH_memory.json``.
+
+The run **fails fast** when the budgeted scenario records zero spills —
+that would mean the benchmark stopped exercising the spill path and the
+acceptance numbers are vacuous.
+"""
 from __future__ import annotations
 
+import json
+
 from repro.benchsuite import BENCHMARKS, GPUS
+from repro.benchsuite.outofcore import (build_outofcore, verify_outofcore,
+                                        working_set_bytes)
+from repro.core import make_scheduler
 
 from .common import emit
 
+# Acceptance: budgeted makespan <= RATIO_LIMIT x unlimited, >= 1 spill.
+RATIO_LIMIT = 2.0
 
-def main() -> list:
+
+def _mem_stats(sched) -> dict:
+    return {k: v for k, v in sched.stats().items()
+            if k.startswith("mem_") and not isinstance(v, dict)}
+
+
+def run_outofcore(budget, *, simulate: bool, chunks: int, n: int) -> dict:
+    s = make_scheduler("parallel", simulate=simulate, memory_budget=budget)
+    try:
+        arrays = build_outofcore(s, chunks=chunks, n=n)
+        ok = True if simulate else verify_outofcore(arrays)
+        s.sync()
+        return {"makespan_s": s.timeline.makespan, "correct": bool(ok),
+                **_mem_stats(s)}
+    finally:
+        s.shutdown()
+
+
+def table1_rows() -> list:
     rows = []
     for bname, bench in BENCHMARKS.items():
         for scale in (0.02, 0.1, 0.5, 1.0):
@@ -15,9 +55,58 @@ def main() -> list:
                             if fb <= spec.mem_gb * 0.9 * 2 ** 30)
             rows.append((f"table1/{bname}/scale{scale}", 0.0,
                          f"footprint_gb={fb / 2 ** 30:.2f};fits=[{fits}]"))
+    return rows
+
+
+def main(smoke: bool = False) -> list:
+    chunks, n = (6, 1 << 10) if smoke else (8, 1 << 16)
+    budget = working_set_bytes(chunks, n) // 2    # working set = 2x budget
+
+    unlimited = run_outofcore(None, simulate=True, chunks=chunks, n=n)
+    budgeted = run_outofcore(budget, simulate=True, chunks=chunks, n=n)
+    # The real-executor correctness pass runs on smaller chunks (it moves
+    # actual bytes); its budget scales with its own working set.
+    real_n = min(n, 1 << 12)
+    real = run_outofcore(working_set_bytes(chunks, real_n) // 2,
+                         simulate=False, chunks=chunks, n=real_n)
+    ratio = budgeted["makespan_s"] / max(unlimited["makespan_s"], 1e-12)
+
+    rows = [] if smoke else table1_rows()
+    rows.append(("outofcore/sim/unlimited", unlimited["makespan_s"] * 1e6,
+                 f"spills={unlimited['mem_spills']}"))
+    rows.append(("outofcore/sim/budgeted", budgeted["makespan_s"] * 1e6,
+                 f"spills={budgeted['mem_spills']} "
+                 f"spill_mb={budgeted['mem_spill_bytes'] / 2 ** 20:.2f} "
+                 f"makespan_ratio={ratio:.3f}"))
+    rows.append(("outofcore/real/budgeted", real["makespan_s"] * 1e6,
+                 f"spills={real['mem_spills']} correct={real['correct']}"))
+
+    result = {"budget_bytes": budget,
+              "working_set_bytes": working_set_bytes(chunks, n),
+              "sim_unlimited": unlimited, "sim_budgeted": budgeted,
+              "real_budgeted": real, "makespan_ratio": ratio}
+    if not smoke:
+        with open("BENCH_memory.json", "w") as f:
+            json.dump(result, f, indent=2, sort_keys=True)
     emit(rows)
+
+    # Fail-fast gates: the whole point of the scenario is to exercise the
+    # spill path within the acceptance envelope.
+    if budgeted["mem_spills"] < 1 or real["mem_spills"] < 1:
+        raise SystemExit("bench_memory: out-of-core scenario recorded zero "
+                         "spills — the spill path is not being exercised")
+    if unlimited["mem_spills"] != 0 or unlimited["mem_evict_blocks"] != 0:
+        raise SystemExit("bench_memory: unlimited-budget run spilled — "
+                         "budget accounting is broken")
+    if not real["correct"]:
+        raise SystemExit("bench_memory: out-of-core results diverge from "
+                         "the reference on the real executor")
+    if ratio > RATIO_LIMIT:
+        raise SystemExit(f"bench_memory: budgeted makespan is {ratio:.2f}x "
+                         f"the unlimited run (limit {RATIO_LIMIT}x)")
     return rows
 
 
 if __name__ == "__main__":
-    main()
+    import sys
+    main(smoke="--smoke" in sys.argv)

@@ -25,7 +25,8 @@ def main() -> None:
         ("Fig.9 contention", bench_contention),
         ("Fig.11 overlap", bench_overlap),
         ("Fig.12 hw-metrics", bench_hwmetrics),
-        ("Table.I memory", bench_memory),
+        ("Table.I memory + out-of-core spill (BENCH_memory.json)",
+         bench_memory),
         ("Roofline (dry-run)", bench_roofline),
         ("Multi-device scaling", bench_multidevice),
         ("Multi-tenant QoS (BENCH_multitenant.json)", bench_multitenant),

@@ -21,4 +21,8 @@ python -m benchmarks.bench_api_overhead --smoke
 # vs off, plus the thread-safe submission pipeline tests.
 python -m benchmarks.bench_multitenant --smoke
 python -m pytest -q tests/test_multitenant.py
+# Memory-budget smoke: tiny out-of-core scenario on sim + real executors;
+# fails fast when it records zero spills (spill path not exercised) or the
+# budgeted makespan exceeds 2x the unlimited run.
+python -m benchmarks.bench_memory --smoke
 exec python -m pytest -q -m "not slow" "$@"

@@ -6,9 +6,11 @@ from .dag import ComputationDAG, DAGSnapshot
 from .capture import (CaptureContext, ExecutionPlan, PlanCache, PlanElement,
                       SlotSpec)
 from .streams import (DataAffinityPlacement, Lane, MinLoadPlacement,
-                      NewStreamPolicy, ParentStreamPolicy, PlacementPolicy,
+                      MinPressurePlacement, NewStreamPolicy,
+                      ParentStreamPolicy, PlacementPolicy,
                       PLACEMENT_POLICIES, RoundRobinPlacement, StreamManager)
 from .managed import ManagedArray
+from .memory import DeviceOutOfMemoryError, MemoryManager, MemoryPool
 from .submission import SubmissionPipeline
 from .timeline import Timeline, Span
 from .history import KernelHistory
@@ -27,7 +29,8 @@ __all__ = [
     "CaptureContext", "ExecutionPlan", "PlanCache", "PlanElement", "SlotSpec",
     "NewStreamPolicy", "ParentStreamPolicy", "StreamManager",
     "Lane", "PlacementPolicy", "PLACEMENT_POLICIES", "RoundRobinPlacement",
-    "MinLoadPlacement", "DataAffinityPlacement",
+    "MinLoadPlacement", "DataAffinityPlacement", "MinPressurePlacement",
+    "DeviceOutOfMemoryError", "MemoryManager", "MemoryPool",
     "ManagedArray", "Timeline", "Span", "KernelHistory",
     "Executor", "SimExecutor", "SimHardware", "ThreadLaneExecutor",
     "GrScheduler", "make_scheduler",

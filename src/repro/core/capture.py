@@ -170,10 +170,16 @@ class ExecutionPlan:
     slot_arrays: Tuple["weakref.ref", ...]
     lane_devices: Tuple[Tuple[int, int], ...]  # (plan-local lane, device)
     kernel_positions: Tuple[int, ...]
+    # Per-device peak resident bytes of one replay, computed structurally
+    # from the trace (slot geometry + transfer/evict/write transitions).
+    # Part of the signature: replay is gated on the peak still fitting the
+    # current budgets — a shrunk budget re-records a spill-aware plan
+    # instead of silently blowing the device's memory.
+    device_mem: Tuple[Tuple[int, int], ...] = ()
 
     @property
     def signature(self) -> Tuple:
-        return (self.elements, self.slots)
+        return (self.elements, self.slots, self.device_mem)
 
     @property
     def num_kernels(self) -> int:
@@ -195,6 +201,7 @@ class PlanCache:
         self.max_plans_per_name = max_plans_per_name
         self._plans: Dict[str, "OrderedDict[Tuple, ExecutionPlan]"] = {}
         self.records = 0
+        self.replacements = 0
         self.hits = 0
         self.invalidations = 0
 
@@ -203,16 +210,23 @@ class PlanCache:
 
     def store(self, plan: ExecutionPlan) -> List[ExecutionPlan]:
         """Cache ``plan``; returns the plans displaced by it (same signature
-        or LRU overflow) so the caller can release their lane reservations."""
+        or LRU overflow) so the caller can release their lane reservations.
+
+        ``records`` counts net-new signatures only; a same-signature
+        replacement displaces the previous plan and counts under
+        ``replacements`` instead (it used to inflate ``records``, hiding
+        record/replace churn from the stats)."""
         displaced: List[ExecutionPlan] = []
         by_sig = self._plans.setdefault(plan.name, OrderedDict())
         prev = by_sig.pop(plan.signature, None)
         if prev is not None:
             displaced.append(prev)
+            self.replacements += 1
+        else:
+            self.records += 1
         by_sig[plan.signature] = plan
         while len(by_sig) > self.max_plans_per_name:
             displaced.append(by_sig.popitem(last=False)[1])
-        self.records += 1
         return displaced
 
     def invalidate(self, plan: ExecutionPlan) -> None:
@@ -233,6 +247,7 @@ class PlanCache:
     def stats(self) -> dict:
         return {"plans_cached": len(self),
                 "plan_records": self.records,
+                "plan_replacements": self.replacements,
                 "plan_replays": self.hits,
                 "plan_invalidations": self.invalidations}
 
@@ -293,6 +308,47 @@ def _assign_plan_lanes(drafts: Sequence[_Draft]):
     return placed, tuple(enumerate(lane_dev))
 
 
+def _plan_device_mem(drafts: Sequence[_Draft], slots: Sequence[SlotSpec]
+                     ) -> Tuple[Tuple[int, int], ...]:
+    """Per-device peak resident bytes of one replay of the trace.
+
+    Replays the logical residency transitions structurally: slots captured
+    device-resident start on their device; TRANSFER/D2D place a slot on the
+    element's device, EVICT drops it, and a kernel's writable slots
+    materialize on its device.  The running per-device byte sums' maxima
+    are the plan's memory demand — what replay gating checks against the
+    current budgets."""
+    loc: Dict[int, int] = {}            # slot -> device currently holding it
+    cur: Dict[int, int] = {}            # device -> resident bytes
+    peak: Dict[int, int] = {}
+
+    def move(slot: int, dev: Optional[int]) -> None:
+        nb = slots[slot].nbytes
+        if nb <= 0:
+            return
+        old = loc.pop(slot, None)
+        if old is not None:
+            cur[old] -= nb
+        if dev is not None:
+            loc[slot] = dev
+            cur[dev] = cur.get(dev, 0) + nb
+            peak[dev] = max(peak.get(dev, 0), cur[dev])
+
+    for s in slots:
+        if s.device_valid:
+            move(s.index, s.device_id if s.device_id is not None else 0)
+    for d in drafts:
+        if d.kind in (ElementKind.TRANSFER, ElementKind.D2D):
+            move(d.arg_slots[0][0], d.device)
+        elif d.kind is ElementKind.EVICT:
+            move(d.arg_slots[0][0], None)
+        else:
+            for slot, mode in d.arg_slots:
+                if mode.writes:
+                    move(slot, d.device)
+    return tuple(sorted((dv, pk) for dv, pk in peak.items() if pk > 0))
+
+
 class _Recorder:
     def __init__(self) -> None:
         self.slots: List[SlotSpec] = []
@@ -307,6 +363,10 @@ class _Recorder:
 
     def traced(self, e: ComputationalElement) -> bool:
         return e.uid in self._idx_of_uid
+
+    def knows(self, array: Any) -> bool:
+        """Whether ``array`` is already a slot of this recording."""
+        return dep_key(array) in self._slot_of
 
     def _slot_for(self, array: Any) -> int:
         k = dep_key(array)
@@ -377,7 +437,8 @@ class _Recorder:
             slot_arrays=tuple(weakref.ref(a) for a in self.slot_arrays),
             lane_devices=lane_devices,
             kernel_positions=tuple(i for i, d in enumerate(self.drafts)
-                                   if d.kind is ElementKind.KERNEL))
+                                   if d.kind is ElementKind.KERNEL),
+            device_mem=_plan_device_mem(self.drafts, self.slots))
 
 
 # ======================================================================
@@ -398,6 +459,13 @@ class _ReplayState:
         self.started = False
         self.lanes = sched.streams.reserve(plan.key, plan.lane_devices,
                                            sched.executor.is_done)
+        # The plan's captured default arrays (persistent weights etc.) are
+        # pinned against replay-time eviction even before the episode binds
+        # them: evicting one would flip its location bits and guarantee a
+        # state mismatch — and hence divergence — at its first use, so a
+        # replay under sustained pressure would never stick.
+        self.pinned: set = {dep_key(a) for ref in plan.slot_arrays
+                            if (a := ref()) is not None}
 
     @property
     def completed(self) -> bool:
@@ -450,23 +518,22 @@ def _match_kernel(plan: ExecutionPlan, kpos: int, bound: List[Any],
     return new_bind
 
 
-def _apply_location_bits(pe: PlanElement, bound: List[Any]) -> None:
-    """Logical data-location updates at schedule time — identical to what
-    the eager scheduler does in launch()/_prefetch_args()/_insert_d2d()."""
+def _apply_location_bits(sched, pe: PlanElement, bound: List[Any]) -> None:
+    """Logical data-location updates at schedule time — the same
+    MemoryManager transitions the eager pipeline performs, so a replayed
+    (or capture-demoted) episode keeps location bits and resident-set
+    accounting in lockstep with the eager path."""
+    mem = sched.memory
     if pe.kind is ElementKind.TRANSFER:
-        ma = bound[pe.arg_slots[0][0]]
-        ma.device_valid = True
-        ma.device_id = pe.device
+        mem.note_h2d(bound[pe.arg_slots[0][0]], pe.device)
     elif pe.kind is ElementKind.D2D:
-        ma = bound[pe.arg_slots[0][0]]
-        ma.device_id = pe.device
+        mem.note_d2d(bound[pe.arg_slots[0][0]], pe.device)
+    elif pe.kind is ElementKind.EVICT:
+        mem.note_evict(bound[pe.arg_slots[0][0]])
     else:
         for slot, mode in pe.arg_slots:
             if mode.writes:
-                ma = bound[slot]
-                ma.device_valid = True
-                ma.host_valid = False
-                ma.device_id = pe.device
+                mem.note_device_write(bound[slot], pe.device)
 
 
 def _flush_range(sched, r: _ReplayState, hi_inclusive: int,
@@ -488,6 +555,7 @@ def _flush_range(sched, r: _ReplayState, hi_inclusive: int,
         sched.executor.host_overhead(sched.plan_launch_overhead_s)
         r.started = True
     is_done = sched.executor.is_done
+    bounded = sched.memory.bounded
     items = []
     for idx in range(r.flushed, hi_inclusive + 1):
         pe = plan.elements[idx]
@@ -503,6 +571,15 @@ def _flush_range(sched, r: _ReplayState, hi_inclusive: int,
             priority=pe.priority, tenant=pe.tenant, fn_key=pe.fn_key)
         ce.device = pe.device
         ce.src_device = pe.src_device
+        if bounded and pe.kind is not ElementKind.EVICT:
+            # Replays reserve dynamically too: plan gating guarantees the
+            # plan's *own* peak fits the budget, but stale foreign arrays
+            # (earlier episodes' leftovers) may still hold bytes — evict
+            # those eagerly, never an array the plan has bound (or will
+            # bind by default).  The synthesized evicts bypass the replay
+            # lanes entirely.
+            sched.pipeline.reserve(
+                ce, extra_pinned=r.pinned.union(r.bound_keys))
         parents = [r.new_elements[p] for p in pe.parents]
         seen = {p.uid for p in parents}
         entry: List[ComputationalElement] = []
@@ -528,7 +605,7 @@ def _flush_range(sched, r: _ReplayState, hi_inclusive: int,
         sched._elements.append(ce)
         if pe.kind is ElementKind.D2D:
             sched.d2d_transfers += 1
-        _apply_location_bits(pe, r.bound)
+        _apply_location_bits(sched, pe, r.bound)
     sched.executor.submit_batch(items)
     r.flushed = hi_inclusive + 1
     return r.new_elements[hi_inclusive]
@@ -644,6 +721,14 @@ class CaptureContext:
             self.mode = "eager"
             return self
         self.candidates = self.sched.plan_cache.candidates(self.name)
+        if self.sched.memory.bounded:
+            # Budget gating: a plan whose recorded per-device peak no longer
+            # fits the current budgets must not replay (its transfer/evict
+            # structure was recorded for a roomier device).  The episode
+            # falls back to eager execution — and re-records, so the next
+            # episode replays a spill-aware plan under the new budget.
+            self.candidates = [p for p in self.candidates
+                               if self.sched.memory.plan_fits(p.device_mem)]
         if self.candidates:
             self.mode = "match"
         else:
@@ -718,6 +803,15 @@ class CaptureContext:
             # the recording; the episode itself stays correct and eager.
             self.recorder = None
             self.mode = "eager"
+            return
+        if (e.kind is ElementKind.EVICT
+                and not self.recorder.knows(e.args[0].array)):
+            # Budget eviction of an array *foreign* to this episode (a
+            # previous episode's leftover): purely environment-dependent —
+            # baking it into the plan would tie the plan's slots (and its
+            # replayability) to whatever happened to be resident this time.
+            # Episode-local evictions (the victim is already a slot) stay
+            # in the trace: they manage the plan's own working set.
             return
         self.recorder.record(e)
 

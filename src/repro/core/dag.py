@@ -176,6 +176,12 @@ class ComputationDAG:
             return [st.last_writer]
         return []
 
+    def has_device_frontier(self, key: int, writes: bool = True) -> bool:
+        """Whether any live *device-side* element could still order against
+        the array — the one definition of "in-flight" shared by host-access
+        re-validation and evict victim selection."""
+        return any(not d.is_host for d in self.live_deps(key, writes))
+
     def snapshot(self) -> DAGSnapshot:
         """Frozen view of the live frontier state (read-only mappings)."""
         writers = {k: st.last_writer for k, st in self._state.items()

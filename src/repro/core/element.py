@@ -91,6 +91,7 @@ class ElementKind(enum.Enum):
     HOST_ACCESS = "host_access"  # CPU read/write of a managed array (§IV-A)
     TRANSFER = "transfer"        # H2D prefetch / D2H copy (scheduled by runtime)
     D2D = "d2d"                  # device-to-device copy (multi-device runtime)
+    EVICT = "evict"              # budget spill: async D2H + drop device copy
     LIBRARY = "library"          # pre-registered library call (§IV-A)
     SYNC = "sync"                # explicit barrier requested by the host
 

@@ -106,6 +106,16 @@ def _run_device_element(e: ComputationalElement, jdev=None):
         ma.set_physical_device(val)
         return
 
+    if e.kind is ElementKind.EVICT:
+        # Budget spill: write the device copy back to the host buffer when
+        # it was the only valid one, then actually release the device
+        # buffer (dropping the reference frees the backing device memory).
+        ma = e.args[0].array
+        if e.config.get("writeback", True) and ma.device is not None:
+            np.copyto(ma.host, np.asarray(ma.device))
+        ma.set_physical_device(None)
+        return
+
     inputs = [a.array.device_value() for a in e.args]
     if jdev is not None:
         # Commit every input to the lane's device so XLA runs the kernel
@@ -151,6 +161,7 @@ class _LaneWorker(threading.Thread):
                 element.t_start, element.t_end = t0, t1
                 kind = ("h2d" if element.kind is ElementKind.TRANSFER
                         else "d2d" if element.kind is ElementKind.D2D
+                        else "d2h" if element.kind is ElementKind.EVICT
                         else "compute")
                 self.executor.timeline.record(
                     element.uid, element.name, kind, self.lane_id, t0, t1,
@@ -336,6 +347,11 @@ class SimExecutor(Executor):
             work = float(element.transfer_bytes)
         elif element.kind is ElementKind.D2D:
             kind = "d2d"
+            work = float(element.transfer_bytes)
+        elif element.kind is ElementKind.EVICT:
+            # Spill write-back occupies the D2H engine for its byte count;
+            # clean drops (transfer_bytes == 0) complete instantly.
+            kind = "d2h"
             work = float(element.transfer_bytes)
         else:
             kind = "compute"

@@ -86,7 +86,17 @@ class ManagedArray:
         the multi-device migrate stage could treat the dead copy as claimable
         state.  On a never-transferred array this is a no-op: neither
         ``device_valid`` nor ``device_id`` flips.
+
+        The transition routes through the scheduler's MemoryManager (the
+        single owner of location-bit flips) so the device pool's resident-set
+        accounting drops the stale copy in the same step — bits and residency
+        cannot diverge.  Duck-typed test schedulers without a ``memory``
+        attribute fall back to the inline flip.
         """
+        mem = getattr(self._scheduler, "memory", None)
+        if mem is not None:
+            mem.note_host_overwrite(self)
+            return
         self.host_valid = True
         if self.device_valid or self.device_id is not None:
             self.device_valid = False

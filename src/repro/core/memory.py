@@ -1,0 +1,370 @@
+"""Per-device memory manager — budgeted placement + transparent spill/evict.
+
+The paper's scheduler transparently inserts data transfers without advance
+knowledge of the program (§IV); this module extends the same mechanism to
+the *capacity* dimension: each device gets a :class:`MemoryPool` with a
+configurable byte budget, the submission pipeline reserves an element's
+working set before DAG insertion, and under pressure the runtime
+synthesizes DAG-ordered ``EVICT`` transfer elements (async D2H + drop of
+the device copy) for least-recently-used victims — out-of-core working
+sets then run unmodified, they just spill.
+
+Two design rules keep this sound:
+
+* **Logical residency is flipped at schedule time**, exactly like the
+  location bits on :class:`~repro.core.managed.ManagedArray` (see the NOTE
+  in managed.py): the scheduling thread knows what each scheduled element
+  will produce, and worker threads only install physical values.
+* **This manager is the single source of truth for location-bit
+  transitions.**  Every path that used to flip ``host_valid`` /
+  ``device_valid`` / ``device_id`` by hand (eager prefetch, D2D migration,
+  kernel-output updates, capture replay, host overwrites) now goes through
+  one ``note_*`` method that updates the bits *and* the resident-set
+  accounting atomically — the two can no longer diverge, whichever path
+  (eager, replayed, or capture-demoted) scheduled the element.
+
+Budgets are opt-in: ``memory_budget=None`` (the default) tracks residency
+for stats but never evicts, refuses no placements, and inserts no
+elements — the pre-budget behaviour, bit for bit.
+"""
+from __future__ import annotations
+
+import threading
+import weakref
+from collections import OrderedDict
+from typing import (Any, Callable, Dict, Iterable, List, Mapping, Optional,
+                    Sequence, Tuple, Union)
+
+from .element import dep_key
+
+Budget = Union[None, int, Mapping[int, Optional[int]]]
+
+
+class DeviceOutOfMemoryError(RuntimeError):
+    """An element's working set cannot fit any device's byte budget (even
+    after evicting everything else) — the workload is not merely
+    out-of-core, a *single* computational element is over-budget."""
+
+
+class MemoryPool:
+    """Resident-set tracker for one device: byte budget, LRU ordering and
+    spill statistics.
+
+    ``budget_bytes=None`` means unlimited (tracking only).  Stats:
+
+    * ``resident_bytes`` — bytes currently (logically) resident;
+    * ``peak_bytes``     — high-water mark of ``resident_bytes``;
+    * ``spills``         — dirty evictions (device copy newer than host →
+      an async D2H write-back was scheduled);
+    * ``spill_bytes``    — bytes moved by those write-backs;
+    * ``evict_blocks``   — arrays evicted in total (dirty + clean drops).
+    """
+
+    def __init__(self, device_id: int,
+                 budget_bytes: Optional[int] = None) -> None:
+        self.device_id = device_id
+        self.budget_bytes = budget_bytes
+        self.resident_bytes = 0
+        self.peak_bytes = 0
+        self.spills = 0
+        self.spill_bytes = 0
+        self.evict_blocks = 0
+        # key -> nbytes, insertion order == LRU order (oldest first); touch
+        # moves a key to the MRU end.
+        self._resident: "OrderedDict[int, int]" = OrderedDict()
+
+    # -- residency -----------------------------------------------------
+    def __contains__(self, key: int) -> bool:
+        return key in self._resident
+
+    def add(self, key: int, nbytes: int) -> None:
+        prev = self._resident.pop(key, None)
+        if prev is not None:
+            self.resident_bytes -= prev
+        self._resident[key] = nbytes
+        self.resident_bytes += nbytes
+        self.peak_bytes = max(self.peak_bytes, self.resident_bytes)
+
+    def touch(self, key: int) -> None:
+        if key in self._resident:
+            self._resident.move_to_end(key)
+
+    def discard(self, key: int) -> int:
+        nbytes = self._resident.pop(key, None)
+        if nbytes is None:
+            return 0
+        self.resident_bytes -= nbytes
+        return nbytes
+
+    def fits(self, working_set_bytes: int) -> bool:
+        return (self.budget_bytes is None
+                or working_set_bytes <= self.budget_bytes)
+
+    def lru_keys(self) -> List[int]:
+        return list(self._resident)
+
+    def stats(self) -> dict:
+        return {"resident_bytes": self.resident_bytes,
+                "peak_bytes": self.peak_bytes,
+                "spills": self.spills,
+                "spill_bytes": self.spill_bytes,
+                "evict_blocks": self.evict_blocks}
+
+
+def _nbytes(array: Any) -> int:
+    try:
+        return int(getattr(array, "nbytes", 0))
+    except TypeError:  # pragma: no cover - exotic duck types
+        return 0
+
+
+class MemoryManager:
+    """Per-device :class:`MemoryPool` set + the location-bit transitions.
+
+    ``budget`` is ``None`` (unlimited everywhere), one int (same budget on
+    every device) or a ``{device_id: bytes | None}`` mapping (missing
+    devices unlimited).  All methods are thread-safe: scheduling threads
+    hold the submission-pipeline lock, but array finalizers (GC) may fire
+    anywhere, so pool mutations take a private lock.
+    """
+
+    def __init__(self, num_devices: int = 1, budget: Budget = None) -> None:
+        self.num_devices = max(1, num_devices)
+        if isinstance(budget, Mapping):
+            per_dev = [budget.get(d) for d in range(self.num_devices)]
+        else:
+            per_dev = [budget] * self.num_devices
+        self.pools: List[MemoryPool] = [
+            MemoryPool(d, per_dev[d]) for d in range(self.num_devices)]
+        self._lock = threading.RLock()
+        # key -> (device, weakref) for every resident array; the weakref's
+        # finalizer drops residency when an array is GC'd mid-episode, so
+        # long-running serving loops cannot leak pool accounting.
+        self._where: Dict[int, Tuple[int, "weakref.ref"]] = {}
+
+    # ------------------------------------------------------------------
+    @property
+    def bounded(self) -> bool:
+        """True when at least one device has a finite budget."""
+        return any(p.budget_bytes is not None for p in self.pools)
+
+    def pool(self, device: int) -> MemoryPool:
+        return self.pools[min(max(0, int(device)), self.num_devices - 1)]
+
+    def _on_dead(self, key: int) -> None:
+        with self._lock:
+            entry = self._where.pop(key, None)
+            if entry is not None:
+                self.pools[entry[0]].discard(key)
+
+    def _make_resident(self, ma: Any, device: int) -> None:
+        nb = _nbytes(ma)
+        if nb <= 0:
+            return      # ManagedValue / zero-size arrays are never tracked
+        key = dep_key(ma)
+        device = min(max(0, int(device)), self.num_devices - 1)
+        with self._lock:
+            prev = self._where.get(key)
+            if prev is not None and prev[0] != device:
+                self.pools[prev[0]].discard(key)
+            if prev is None or prev[0] != device:
+                try:
+                    ref = weakref.ref(ma, lambda _r, k=key: self._on_dead(k))
+                except TypeError:       # plain test doubles without __weakref__
+                    ref = (lambda m: (lambda: m))(ma)
+                self._where[key] = (device, ref)
+                self.pools[device].add(key, nb)
+            else:
+                self.pools[device].touch(key)
+
+    def _drop_residency(self, ma: Any) -> None:
+        key = dep_key(ma)
+        with self._lock:
+            entry = self._where.pop(key, None)
+            if entry is not None:
+                self.pools[entry[0]].discard(key)
+
+    # ------------------------------------------------------------------
+    # Location-bit transitions (single source of truth).  Each mirrors one
+    # schedule-time update the runtime used to perform inline; callers —
+    # eager pipeline, capture replay, host-write path — may not flip the
+    # bits themselves.
+    # ------------------------------------------------------------------
+    def note_h2d(self, ma: Any, device: int) -> None:
+        """An H2D prefetch of ``ma`` onto ``device`` was scheduled."""
+        ma.device_valid = True
+        ma.device_id = device
+        self._make_resident(ma, device)
+
+    def note_d2d(self, ma: Any, device: int) -> None:
+        """A D2D migration of ``ma`` onto ``device`` was scheduled (or an
+        unowned device copy was claimed): single-copy ownership moves."""
+        ma.device_id = device
+        self._make_resident(ma, device)
+
+    def note_device_write(self, ma: Any, device: int) -> None:
+        """A kernel writing ``ma`` on ``device`` was scheduled: the device
+        copy becomes the only valid one."""
+        ma.device_valid = True
+        ma.host_valid = False
+        ma.device_id = device
+        self._make_resident(ma, device)
+
+    def note_evict(self, ma: Any) -> bool:
+        """An EVICT of ``ma`` was scheduled: the device copy is dropped
+        (after an async D2H write-back when it was the only valid copy).
+        Returns True when the eviction was dirty (write-back needed)."""
+        dirty = not getattr(ma, "host_valid", True)
+        device = getattr(ma, "device_id", None)
+        pool = self.pool(device if device is not None else 0)
+        ma.host_valid = True
+        ma.device_valid = False
+        ma.device_id = None
+        self._drop_residency(ma)
+        with self._lock:
+            pool.evict_blocks += 1
+            if dirty:
+                pool.spills += 1
+                pool.spill_bytes += _nbytes(ma)
+        return dirty
+
+    def note_host_overwrite(self, ma: Any) -> None:
+        """The host mutated ``ma.host``: the device copy (if any) is stale
+        and no device owns a valid copy anymore (see managed.py for why
+        ``device_id`` must clear too)."""
+        ma.host_valid = True
+        if ma.device_valid or ma.device_id is not None:
+            ma.device_valid = False
+            ma.device_id = None
+        self._drop_residency(ma)
+
+    # ------------------------------------------------------------------
+    # Budget planning (placement + the submission pipeline's reserve stage)
+    # ------------------------------------------------------------------
+    def _distinct_args(self, args: Sequence[Any], device: int):
+        """Yield ``(key, nbytes, resident_on_device)`` per distinct sized
+        argument — the one accounting rule behind working-set size,
+        placement pressure and the reserve stage.  Callers needing the
+        residency flag must hold the manager lock."""
+        seen = set()
+        for a in args:
+            ma = a.array
+            nb = _nbytes(ma)
+            k = dep_key(ma)
+            if nb <= 0 or k in seen:
+                continue
+            seen.add(k)
+            entry = self._where.get(k)
+            yield k, nb, (entry is not None and entry[0] == device)
+
+    def working_set_bytes(self, args: Sequence[Any]) -> int:
+        """Bytes that must be simultaneously resident to run one element:
+        every distinct argument's nbytes (reads are uploaded/migrated,
+        outputs materialize on-device)."""
+        return sum(nb for _, nb, _ in self._distinct_args(args, -1))
+
+    def device_fits(self, device: int, working_set_bytes: int) -> bool:
+        return self.pool(device).fits(working_set_bytes)
+
+    def pressure(self, device: int) -> float:
+        """Occupancy fraction of the device's budget (0.0 when unlimited)."""
+        pool = self.pool(device)
+        if pool.budget_bytes is None or pool.budget_bytes <= 0:
+            return 0.0
+        return pool.resident_bytes / pool.budget_bytes
+
+    def placement_pressure(self, device: int, args: Sequence[Any]) -> float:
+        """Budget fraction the device would reach after hosting ``args``
+        (incoming = argument bytes not already resident there)."""
+        pool = self.pool(device)
+        if pool.budget_bytes is None or pool.budget_bytes <= 0:
+            return 0.0
+        with self._lock:
+            incoming = sum(nb for _, nb, here in
+                           self._distinct_args(args, pool.device_id)
+                           if not here)
+        return (pool.resident_bytes + incoming) / pool.budget_bytes
+
+    def plan_fits(self, device_mem: Iterable[Tuple[int, int]]) -> bool:
+        """Whether a captured plan's recorded per-device peak bytes fit the
+        current budgets (capture/replay gating)."""
+        return all(self.pool(d).fits(peak) for d, peak in device_mem)
+
+    def reserve(self, device: int, element: Any,
+                is_frontier: Optional[Callable[[int], bool]] = None,
+                extra_pinned: Optional[Iterable[int]] = None) -> List[Any]:
+        """Reserve ``element``'s working set on ``device``; under pressure,
+        pick LRU victims to evict (non-frontier arrays first — arrays still
+        referenced by in-flight DAG work are spilled only as a last resort,
+        the DAG ordering of the EVICT element keeps even that correct).
+
+        ``extra_pinned`` keys are additionally exempt from eviction without
+        counting toward the element's working set (the replay fast path
+        pins every plan-bound array: a replayed episode may evict stale
+        *foreign* leftovers, never its own schedule's data).
+
+        Returns the victim arrays (the pipeline synthesizes one EVICT
+        element per victim); raises :class:`DeviceOutOfMemoryError` when
+        the element's own working set exceeds the budget outright."""
+        pool = self.pool(device)
+        if pool.budget_bytes is None:
+            return []
+        pinned: Dict[int, int] = {}
+        incoming = 0
+        with self._lock:
+            for k, nb, here in self._distinct_args(element.args,
+                                                   pool.device_id):
+                pinned[k] = nb
+                if here:
+                    pool.touch(k)
+                else:
+                    incoming += nb
+            ws = sum(pinned.values())
+            if ws > pool.budget_bytes:
+                raise DeviceOutOfMemoryError(
+                    f"element {getattr(element, 'name', '?')!r} needs "
+                    f"{ws} bytes resident at once on device "
+                    f"{pool.device_id}, budget is {pool.budget_bytes}")
+            need = pool.resident_bytes + incoming - pool.budget_bytes
+            if need <= 0:
+                return []
+            no_evict = set(pinned)
+            if extra_pinned is not None:
+                no_evict.update(extra_pinned)
+            victims: List[Any] = []
+            # Two LRU passes: non-frontier arrays first, then (only if the
+            # budget still cannot be met) arrays with live DAG readers.
+            for frontier_pass in (False, True):
+                if need <= 0:
+                    break
+                for k in pool.lru_keys():
+                    if need <= 0:
+                        break
+                    if k in no_evict:
+                        continue
+                    if (not frontier_pass and is_frontier is not None
+                            and is_frontier(k)):
+                        continue
+                    entry = self._where.get(k)
+                    ma = entry[1]() if entry is not None else None
+                    freed = pool.discard(k)
+                    self._where.pop(k, None)
+                    need -= freed
+                    if ma is not None:
+                        victims.append(ma)
+            return victims
+
+    # ------------------------------------------------------------------
+    def stats(self) -> dict:
+        agg = {"resident_bytes": 0, "peak_bytes": 0, "spills": 0,
+               "spill_bytes": 0, "evict_blocks": 0}
+        per = {}
+        for p in self.pools:
+            s = p.stats()
+            per[p.device_id] = dict(s, budget_bytes=p.budget_bytes)
+            for k in agg:
+                agg[k] += s[k]
+        out = {f"mem_{k}": v for k, v in agg.items()}
+        if self.num_devices > 1:
+            out["mem_per_device"] = per
+        return out

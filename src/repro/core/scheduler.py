@@ -28,6 +28,7 @@ from .element import (Arg, ComputationalElement, DEFAULT_TENANT, ElementKind,
                       const, dep_key, inout, out)
 from .executor import Executor, SimExecutor, SimHardware, ThreadLaneExecutor
 from .managed import ManagedArray
+from .memory import Budget, MemoryManager
 from .streams import NewStreamPolicy, ParentStreamPolicy, StreamManager
 from .submission import SubmissionPipeline
 from .timeline import Timeline
@@ -50,18 +51,24 @@ class GrScheduler:
                  max_lanes: Optional[int] = None,
                  num_devices: int = 1,
                  placement: str = "round-robin",
-                 tenant_quotas: Optional[Mapping[str, int]] = None) -> None:
+                 tenant_quotas: Optional[Mapping[str, int]] = None,
+                 memory_budget: Budget = None) -> None:
         assert policy in ("serial", "parallel")
         self.policy = policy
         self.num_devices = max(1, num_devices)
         self.executor = executor or ThreadLaneExecutor(
             num_devices=self.num_devices)
         self.dag = ComputationDAG()
+        # Per-device byte budgets (None = unlimited): the MemoryManager owns
+        # resident-set accounting and every logical location-bit flip; the
+        # pipeline's reserve stage spills LRU victims when a budget is hit.
+        self.memory = MemoryManager(self.num_devices, memory_budget)
         self.streams = StreamManager(new_stream_policy, parent_stream_policy,
                                      max_lanes=max_lanes,
                                      num_devices=self.num_devices,
                                      placement=placement,
                                      tenant_quotas=tenant_quotas)
+        self.streams.memory = self.memory
         self.auto_prefetch = auto_prefetch
         if launch_overhead_s is None:
             launch_overhead_s = 5e-6 if policy == "parallel" else 1e-6
@@ -175,18 +182,19 @@ class GrScheduler:
             if self.policy == "parallel":
                 self.pipeline.run(e)
             else:
+                e.device = 0 if e.device is None else e.device
+                self.pipeline.reserve(e)
                 if self.auto_prefetch:
                     self.pipeline.prefetch(e.args, priority=priority,
                                            tenant=tenant)
                 self.pipeline.serial(e)
             # Logical location update at schedule time: the kernel's writable
-            # outputs will live on device; host copies become stale.
+            # outputs will live on device; host copies become stale.  Routed
+            # through the MemoryManager so residency tracks the bits.
             dev = e.device if e.device is not None else 0
             for a in e.args:
                 if a.mode.writes:
-                    a.array.device_valid = True
-                    a.array.host_valid = False
-                    a.array.device_id = dev
+                    self.memory.note_device_write(a.array, dev)
             return e
 
     def _tune(self, name: str, tune: dict) -> dict:
@@ -264,8 +272,7 @@ class GrScheduler:
         while True:
             self._sync_against(ma, writes=writes)
             with self.pipeline:
-                if any(not d.is_host
-                       for d in self.dag.live_deps(dep_key(ma), writes)):
+                if self.dag.has_device_frontier(dep_key(ma), writes):
                     continue    # a racing launch re-dirtied the array
                 if ma.device_valid and not ma.host_valid:
                     self._d2h(ma)
@@ -323,6 +330,12 @@ class GrScheduler:
         with self.pipeline:
             if self._capture is not None:
                 raise RuntimeError("cannot replay inside a capture context")
+            if not self.memory.plan_fits(plan.device_mem):
+                from .memory import DeviceOutOfMemoryError
+                raise DeviceOutOfMemoryError(
+                    f"plan {plan.name!r} needs per-device peak bytes "
+                    f"{dict(plan.device_mem)} but the current budgets are "
+                    f"smaller; re-capture under the new budget instead")
             return replay_plan(self, plan, bindings)
 
     # ------------------------------------------------------------------
@@ -365,7 +378,8 @@ class GrScheduler:
                 **self.pipeline.stats(),
                 **self.streams.stats(),
                 **self.executor.history.stats(),
-                **self.plan_cache.stats()}
+                **self.plan_cache.stats(),
+                **self.memory.stats()}
 
     def tenant_stats(self) -> dict:
         """Per-tenant QoS metrics (makespan, queueing delay, completion

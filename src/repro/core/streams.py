@@ -139,9 +139,29 @@ class DataAffinityPlacement(PlacementPolicy):
         return self._fallback.choose(element, manager, is_done)
 
 
+class MinPressurePlacement(PlacementPolicy):
+    """Memory-aware placement: the device whose budget occupancy after
+    hosting the element's arguments is lowest; ties break by outstanding
+    load, then device id.  With unlimited budgets every device reports
+    zero pressure and the policy degrades to min-load."""
+
+    name = "min-pressure"
+
+    def __init__(self) -> None:
+        self._fallback = MinLoadPlacement()
+
+    def choose(self, element, manager, is_done) -> int:
+        mem = getattr(manager, "memory", None)
+        if mem is None or not mem.bounded:
+            return self._fallback.choose(element, manager, is_done)
+        return min(range(manager.num_devices),
+                   key=lambda d: (mem.placement_pressure(d, element.args),
+                                  manager.device_load(d, is_done), d))
+
+
 PLACEMENT_POLICIES = {p.name: p for p in
                       (RoundRobinPlacement, MinLoadPlacement,
-                       DataAffinityPlacement)}
+                       DataAffinityPlacement, MinPressurePlacement)}
 
 
 def make_placement(policy: Union[str, PlacementPolicy, None]
@@ -178,6 +198,10 @@ class StreamManager:
         # bulk tenant with a quota of 2 can keep at most 2 queues of work
         # outstanding per device, however many elements it submits.
         self.tenant_quotas: Dict[str, int] = dict(tenant_quotas or {})
+        # MemoryManager installed by the owning scheduler; placement uses it
+        # to refuse devices whose byte budget the element cannot fit and to
+        # drive the min-pressure policy.  None for standalone managers.
+        self.memory = None
         self.lanes: Dict[int, Lane] = {}
         self._free: Dict[int, deque] = {}    # device -> FIFO of idle lane ids
         self.lanes_created = 0
@@ -201,11 +225,27 @@ class StreamManager:
         return sum(l.load(is_done) for l in self.device_lanes(device))
 
     def place(self, element: ComputationalElement, is_done) -> int:
-        """Pick the device for ``element`` (0 when single-device)."""
+        """Pick the device for ``element`` (0 when single-device).
+
+        Whatever the policy chose, a device whose byte budget is smaller
+        than the element's working set is refused — no amount of eviction
+        could make the element fit there.  The least-pressured fitting
+        device is substituted; when *no* device fits, the policy's choice
+        stands and the pipeline's reserve stage raises the descriptive
+        :class:`~repro.core.memory.DeviceOutOfMemoryError`."""
         if self.num_devices <= 1:
             return 0
         d = self.placement.choose(element, self, is_done)
-        return min(max(0, int(d)), self.num_devices - 1)
+        d = min(max(0, int(d)), self.num_devices - 1)
+        mem = self.memory
+        if mem is not None and mem.bounded:
+            ws = mem.working_set_bytes(element.args)
+            if not mem.device_fits(d, ws):
+                fitting = [x for x in range(self.num_devices)
+                           if mem.device_fits(x, ws)]
+                if fitting:
+                    d = min(fitting, key=lambda x: (mem.pressure(x), x))
+        return d
 
     # ------------------------------------------------------------------
     def _new_lane(self, device: int) -> Lane:

@@ -8,7 +8,8 @@ to the scheduler.  Multi-tenant serving has *concurrent* submitters, so the
 pipeline is now an explicit object with one re-entrant lock guarding every
 stage:
 
-    place -> prefetch (H2D) -> migrate (D2D) -> DAG-add -> lane-assign -> submit
+    place -> reserve (EVICT) -> prefetch (H2D) -> migrate (D2D) -> DAG-add
+          -> lane-assign -> submit
 
 The lock is held across the whole pipeline for one element (plus the host
 synchronization paths), which keeps the paper's dependency inference sound
@@ -24,7 +25,7 @@ without re-implementing ``launch``.
 from __future__ import annotations
 
 import threading
-from typing import TYPE_CHECKING, Sequence, Set
+from typing import TYPE_CHECKING, Iterable, Optional, Sequence, Set
 
 from .element import (Arg, ComputationalElement, DEFAULT_TENANT, ElementKind,
                       inout)
@@ -69,13 +70,70 @@ class SubmissionPipeline:
             e.device = sched.streams.place(e, sched.executor.is_done)
         else:
             e.device = min(max(0, int(e.device)), sched.num_devices - 1)
-        if sched.auto_prefetch:
+        # Reserve the element's working set before anything lands on the
+        # device: under budget pressure this synthesizes DAG-ordered EVICT
+        # elements for LRU victims (spill D2H first, reload H2D after — the
+        # copy engines see them in that order).
+        self.reserve(e)
+        # Host-resident read args must reach the device ahead of the kernel.
+        # With auto_prefetch off on a single device the executor reads the
+        # host copy in place (GrCUDA's fault-driven mode), but on multiple
+        # devices skipping the H2D would leave cross-device host-only reads
+        # never localized (migrate() only moves device-owned copies), so the
+        # upload is forced regardless of the flag.
+        if sched.auto_prefetch or sched.num_devices > 1:
             self.prefetch(e.args, e.device, priority=e.priority,
                           tenant=e.tenant)
         if sched.num_devices > 1:
             self.migrate(e.args, e.device, priority=e.priority,
                          tenant=e.tenant)
         self.schedule(e)
+
+    def reserve(self, e: ComputationalElement,
+                extra_pinned: Optional[Iterable[int]] = None) -> None:
+        """Budget stage: make room for ``e``'s working set on its device.
+
+        No-op under unlimited budgets.  Victims are chosen LRU-first among
+        non-frontier arrays (no live DAG readers/writer); each victim gets
+        one EVICT element — an async D2H write-back (clean copies just
+        drop) ordered *after* the victim's last reader by the ordinary
+        dependency rules, exactly like the paper's transparent H2D/D2D
+        insertion.  Evictions inherit the triggering element's priority and
+        tenant: making room is work done on that element's behalf.
+
+        ``extra_pinned`` forwards to :meth:`MemoryManager.reserve` — the
+        replay fast path pins its plan-bound arrays so only foreign
+        leftovers are evicted under a replay."""
+        sched = self.sched
+        mem = sched.memory
+        if not mem.bounded:
+            return
+        for ma in mem.reserve(e.device, e, sched.dag.has_device_frontier,
+                              extra_pinned):
+            self.evict(ma, priority=e.priority, tenant=e.tenant)
+
+    def evict(self, ma, *, priority: int = 0,
+              tenant: str = DEFAULT_TENANT) -> ComputationalElement:
+        """Synthesize and schedule one EVICT element for ``ma``.
+
+        ``inout`` access makes the DAG order it after every in-flight
+        reader and the last writer of the array; the device copy is dropped
+        at schedule time (logical bits + residency via the MemoryManager),
+        the executors perform the physical write-back/release.  A clean
+        copy (host still valid) is dropped without moving bytes."""
+        sched = self.sched
+        dirty = not getattr(ma, "host_valid", True)
+        t = ComputationalElement(
+            fn=None, args=(inout(ma),), kind=ElementKind.EVICT,
+            name=f"evict_{ma.name}", transfer_bytes=ma.nbytes if dirty else 0,
+            config={"writeback": dirty}, priority=priority, tenant=tenant)
+        t.device = ma.device_id if ma.device_id is not None else 0
+        if sched.policy == "parallel":
+            self.schedule(t)
+        else:
+            self.serial(t)
+        sched.memory.note_evict(ma)
+        return t
 
     def prefetch(self, args: Sequence[Arg], device: int = 0, *,
                  priority: int = 0, tenant: str = DEFAULT_TENANT) -> None:
@@ -97,9 +155,9 @@ class SubmissionPipeline:
                     self.schedule(t)
                 else:
                     self.serial(t)
-                # Logical location update at schedule time (see managed.py).
-                ma.device_valid = True
-                ma.device_id = device
+                # Logical location update at schedule time (see managed.py),
+                # via the MemoryManager so residency tracks the bits.
+                sched.memory.note_h2d(ma, device)
 
     def migrate(self, args: Sequence[Arg], device: int, *,
                 priority: int = 0, tenant: str = DEFAULT_TENANT) -> None:
@@ -113,7 +171,7 @@ class SubmissionPipeline:
                 continue
             src = getattr(ma, "device_id", None)
             if src is None:
-                ma.device_id = device      # claim unowned device copies
+                sched.memory.note_d2d(ma, device)  # claim unowned copies
                 continue
             if src == device:
                 continue
@@ -124,7 +182,7 @@ class SubmissionPipeline:
             t.device = device
             t.src_device = src
             self.schedule(t)
-            ma.device_id = device
+            sched.memory.note_d2d(ma, device)
             sched.d2d_transfers += 1
 
     def schedule(self, e: ComputationalElement) -> None:

@@ -460,3 +460,58 @@ def test_plan_lanes_do_not_leak_into_eager_pool():
     e = s.launch(None, [inout(w)], name="EAGER", cost_s=1e-4)
     assert e.stream not in reserved
     s.sync()
+
+
+def test_plan_cache_replacement_stat_and_displacement():
+    """``records`` counts net-new signatures only; a same-signature store
+    is a replacement (returned as displaced so reservations are freed)."""
+    from repro.core.capture import ExecutionPlan, PlanCache
+
+    def mk(key, sig_tag):
+        return ExecutionPlan(
+            name="n", key=key, elements=(), slots=(), fns=(), configs=(),
+            slot_arrays=(), lane_devices=(), kernel_positions=(),
+            device_mem=((0, sig_tag),))
+
+    pc = PlanCache(max_plans_per_name=2)
+    p1 = mk("k1", 1)
+    assert pc.store(p1) == []
+    assert pc.records == 1 and pc.replacements == 0
+    p1b = mk("k1b", 1)                  # same signature -> replacement
+    assert pc.store(p1b) == [p1]
+    assert pc.records == 1 and pc.replacements == 1
+    pc.store(mk("k2", 2))
+    assert pc.store(mk("k3", 3)) == [p1b]   # LRU overflow displaces p1b
+    assert pc.records == 3 and pc.replacements == 1
+    assert pc.stats()["plan_replacements"] == 1
+    assert pc.stats()["plan_records"] == 3
+
+
+def test_plan_cache_overflow_releases_displaced_reservations():
+    """Overflowing max_plans_per_name must release every displaced plan's
+    lane reservations — no reserved-lane leak, however many signatures
+    cycle through one capture name."""
+    s = make_scheduler("parallel", simulate=True)
+
+    def ep(n):
+        with s.capture("many"):
+            _episode(s, n=n)
+        s.sync()
+
+    shapes = [256 + 32 * i for i in range(9)]
+    for n in shapes[:8]:
+        ep(n)                           # record
+        ep(n)                           # replay -> reserves a lane set
+    st = s.stats()
+    assert st["plan_records"] == 8 and st["plan_replays"] == 8
+    assert len(s.plan_cache) == 8
+    ep(shapes[8])                       # 9th signature displaces the oldest
+    assert len(s.plan_cache) == 8
+    assert s.stats()["plan_records"] == 9
+    live_keys = {p.key for p in s.plan_cache.candidates("many")}
+    assert set(s.streams._plan_lanes) <= live_keys
+    reserved_ids = {lid for insts in s.streams._plan_lanes.values()
+                    for inst in insts for lid in inst.values()}
+    leaked = [l.lane_id for l in s.streams.lanes.values()
+              if l.reserved and l.lane_id not in reserved_ids]
+    assert not leaked

@@ -1,0 +1,483 @@
+"""Device-memory manager: budgeted placement, transparent spill/evict,
+out-of-core workloads — plus the ISSUE 5 satellite regressions.
+
+Covers the MemoryPool/MemoryManager subsystem end to end: LRU accounting,
+DAG-ordered EVICT elements on both executors, budget-aware placement
+(refusal + the ``min-pressure`` policy), capture/replay gating on recorded
+per-device peaks, the memory-conservation property (resident bytes always
+equal the device-valid arrays' bytes), the forced-H2D multi-device
+prefetch fix, the capture-demotion location-bit audit and the concurrent
+sync-vs-launch stress test.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from _hypothesis_fallback import given, settings, st
+from repro.core import (DeviceOutOfMemoryError, ElementKind, MemoryPool,
+                        function, make_scheduler)
+from repro.benchsuite.outofcore import (build_outofcore, verify_outofcore,
+                                        working_set_bytes)
+
+N = 256
+CHUNK = 4 * N
+
+STAGE = function(lambda x, o: x * 2.0 + 1.0, modes=("const", "out"),
+                 name="mem_stage", outputs=0)
+STAGE2 = function(lambda a, b, o: a + b, modes=("const", "const", "out"),
+                  name="mem_stage2", outputs=0)
+
+
+def _stage(sched, cost_s=1e-4):
+    return STAGE.with_options(scheduler=sched, cost_s=cost_s)
+
+
+def _mem(sched):
+    return {k: v for k, v in sched.stats().items() if k.startswith("mem_")}
+
+
+def assert_conservation(sched, arrays):
+    """resident_bytes per device == Σ nbytes of device-valid arrays there."""
+    for d in range(sched.num_devices):
+        expect = sum(a.nbytes for a in arrays
+                     if a.device_valid and (a.device_id or 0) == d)
+        got = sched.memory.pools[d].resident_bytes
+        assert got == expect, f"device {d}: tracked {got} != actual {expect}"
+
+
+# ======================================================================
+# MemoryPool unit behaviour
+# ======================================================================
+
+def test_pool_budget_lru_and_stats():
+    p = MemoryPool(0, budget_bytes=100)
+    p.add(1, 40)
+    p.add(2, 40)
+    assert p.resident_bytes == 80 and p.peak_bytes == 80
+    p.touch(1)                       # 2 becomes LRU
+    assert p.lru_keys() == [2, 1]
+    assert p.discard(2) == 40
+    assert p.resident_bytes == 40 and p.peak_bytes == 80
+    assert p.fits(100) and not p.fits(101)
+    assert MemoryPool(0).fits(1 << 60)       # unlimited
+
+
+def test_pool_re_add_updates_bytes():
+    p = MemoryPool(0)
+    p.add(1, 10)
+    p.add(1, 30)                     # same key, new size
+    assert p.resident_bytes == 30
+
+
+# ======================================================================
+# Spill/evict on the simulator and the real executor
+# ======================================================================
+
+def test_out_of_core_sim_spills_within_budget():
+    budget = working_set_bytes(6, N) // 2
+    s_unl = make_scheduler("parallel", simulate=True)
+    build_outofcore(s_unl, chunks=6, n=N)
+    s_unl.sync()
+    s = make_scheduler("parallel", simulate=True, memory_budget=budget)
+    arrays = build_outofcore(s, chunks=6, n=N)
+    s.sync()
+    st = _mem(s)
+    assert st["mem_spills"] >= 1
+    assert st["mem_resident_bytes"] <= budget
+    assert s.memory.pools[0].peak_bytes <= budget
+    # Acceptance envelope: spill traffic must not blow up the makespan.
+    assert s.timeline.makespan <= 2.0 * s_unl.timeline.makespan
+    assert_conservation(s, arrays["x"] + arrays["y"] + arrays["z"])
+    # Spill write-backs occupy the D2H engine on the sim timeline.
+    assert any(sp.kind == "d2h" and sp.name.startswith("evict_")
+               for sp in s.timeline.spans)
+
+
+def test_out_of_core_real_correct_through_spills():
+    budget = working_set_bytes(6, N) // 2
+    s = make_scheduler("parallel", memory_budget=budget)
+    try:
+        arrays = build_outofcore(s, chunks=6, n=N)
+        assert verify_outofcore(arrays)
+        s.sync()
+        st = _mem(s)
+        assert st["mem_spills"] >= 1
+        # The real executor actually releases spilled device buffers.
+        evicted = [a for a in arrays["x"] + arrays["y"]
+                   if not a.device_valid]
+        assert evicted and all(a.device is None for a in evicted)
+        assert_conservation(s, arrays["x"] + arrays["y"] + arrays["z"])
+    finally:
+        s.shutdown()
+
+
+def test_unlimited_budget_never_evicts_and_matches_timeline():
+    """budget=None (default) and an over-provisioned budget execute the
+    identical schedule with zero spill stats."""
+    def run(budget):
+        s = make_scheduler("parallel", simulate=True, memory_budget=budget)
+        arrays = build_outofcore(s, chunks=4, n=N)
+        s.sync()
+        spans = [(sp.name, sp.kind, sp.lane, sp.t0, sp.t1)
+                 for sp in s.timeline.spans]
+        return spans, _mem(s), arrays
+    spans_none, st_none, arrays = run(None)
+    spans_big, st_big, _ = run(1 << 40)
+    assert spans_none == spans_big
+    for st in (st_none, st_big):
+        assert st["mem_spills"] == 0 and st["mem_evict_blocks"] == 0
+    assert st_none["mem_peak_bytes"] == working_set_bytes(4, N)
+    s = make_scheduler("parallel", simulate=True)
+    assert not s.memory.bounded
+
+
+def test_evict_is_dag_ordered_after_readers():
+    """The EVICT element must depend on the victim's in-flight reader —
+    the same transparent-transfer ordering the paper uses for H2D."""
+    s = make_scheduler("parallel", simulate=True, memory_budget=2 * CHUNK)
+    x = s.array(np.ones(N, np.float32), name="ev_x")
+    _stage(s, cost_s=5e-3)(x)                # slow reader holds x busy
+    y = s.array(np.ones(N, np.float32), name="ev_y")
+    _stage(s, cost_s=1e-4)(y)                # needs 2 chunks -> evicts x
+    evicts = [e for e in s._elements if e.kind is ElementKind.EVICT]
+    assert len(evicts) >= 1
+    victim = evicts[0]
+    assert victim.args[0].array is x
+    deps = {p.uid for p in victim.parents}
+    # reader returned the allocated output; find the kernel element via DAG
+    kernels = [e for e in s._elements if e.kind is ElementKind.KERNEL]
+    assert kernels[0].uid in deps
+    s.sync()
+    assert not x.device_valid and x.host_valid
+
+
+def test_clean_copies_drop_without_spill_traffic():
+    """Arrays whose host copy is still valid are dropped, not written back:
+    evict_blocks counts them, spills/spill_bytes do not."""
+    s = make_scheduler("parallel", simulate=True, memory_budget=3 * CHUNK)
+    xs = [s.array(np.ones(N, np.float32), name=f"cl_{i}") for i in range(3)]
+    for x in xs[:2]:
+        _stage(s)(x)                         # fills budget; x0 clean-evicted
+    elements = list(s._elements)
+    s.sync()
+    st = _mem(s)
+    assert st["mem_evict_blocks"] >= 1
+    clean_evicts = [e for e in elements
+                    if e.kind is ElementKind.EVICT and e.transfer_bytes == 0]
+    dirty_evicts = [e for e in elements
+                    if e.kind is ElementKind.EVICT and e.transfer_bytes > 0]
+    assert st["mem_spills"] == len(dirty_evicts)
+    assert st["mem_evict_blocks"] == len(clean_evicts) + len(dirty_evicts)
+
+
+# ======================================================================
+# Budget-aware placement
+# ======================================================================
+
+def test_placement_refuses_overbudget_device():
+    """Every policy refuses a device whose budget is smaller than the
+    element's working set (round-robin would otherwise alternate)."""
+    s = make_scheduler("parallel", simulate=True, num_devices=2,
+                       placement="round-robin",
+                       memory_budget={0: CHUNK, 1: 64 * CHUNK})
+    outs = []
+    for i in range(4):
+        x = s.array(np.ones(N, np.float32), name=f"pl_{i}")
+        outs.append(_stage(s)(x))            # ws = 2 chunks > device 0 budget
+    elements = list(s._elements)
+    s.sync()
+    assert all(e._scheduler is s for e in outs)
+    kernels = [e for e in elements if e.kind is ElementKind.KERNEL]
+    assert kernels and all(k.device == 1 for k in kernels)
+
+
+def test_min_pressure_policy_balances_bytes():
+    s = make_scheduler("parallel", simulate=True, num_devices=2,
+                       placement="min-pressure",
+                       memory_budget=8 * CHUNK)
+    for i in range(6):
+        x = s.array(np.ones(N, np.float32), name=f"mp_{i}")
+        _stage(s)(x)
+    elements = list(s._elements)
+    s.sync()
+    kernels = [e for e in elements if e.kind is ElementKind.KERNEL]
+    per_dev = {d: sum(1 for k in kernels if k.device == d) for d in (0, 1)}
+    assert per_dev[0] == per_dev[1] == 3
+    assert s.streams.placement.name == "min-pressure"
+
+
+def test_min_pressure_degrades_to_min_load_when_unbounded():
+    s = make_scheduler("parallel", simulate=True, num_devices=2,
+                       placement="min-pressure")
+    for i in range(4):
+        x = s.array(np.ones(N, np.float32), name=f"ml_{i}")
+        _stage(s)(x)
+    elements = list(s._elements)
+    s.sync()
+    kernels = [e for e in elements if e.kind is ElementKind.KERNEL]
+    assert {k.device for k in kernels} == {0, 1}
+
+
+def test_oversized_working_set_raises():
+    s = make_scheduler("parallel", simulate=True, memory_budget=CHUNK)
+    x = s.array(np.ones(N, np.float32), name="big")
+    with pytest.raises(DeviceOutOfMemoryError):
+        _stage(s)(x)                          # needs 2 chunks, budget is 1
+
+
+# ======================================================================
+# Capture/replay under budgets
+# ======================================================================
+
+def test_capture_records_device_mem_and_replays_evicts():
+    s = make_scheduler("parallel", simulate=True, memory_budget=3 * CHUNK)
+    for ep in range(3):
+        with s.capture("oc_ep"):
+            xs = [s.array(np.zeros(N, np.float32), name=f"ce{ep}_{i}")
+                  for i in range(2)]
+            for x in xs:
+                _stage(s)(x)
+        s.sync()
+    st = s.stats()
+    assert st["plan_records"] == 1 and st["plan_replays"] == 2
+    (plan,) = s.plan_cache.candidates("oc_ep")
+    assert plan.device_mem and plan.device_mem[0][1] <= 3 * CHUNK
+    assert any(pe.kind is ElementKind.EVICT for pe in plan.elements)
+    assert st["mem_evict_blocks"] >= 3       # evictions replayed too
+
+
+def test_replay_falls_back_to_eager_when_budget_shrinks():
+    s = make_scheduler("parallel", simulate=True, memory_budget=16 * CHUNK)
+    def episode():
+        with s.capture("shrink_ep"):
+            xs = [s.array(np.zeros(N, np.float32)) for _ in range(2)]
+            outs = [_stage(s)(x) for x in xs]
+        s.sync()
+        return outs
+    episode()
+    episode()
+    assert s.stats()["plan_replays"] == 1
+    (plan,) = s.plan_cache.candidates("shrink_ep")
+    # Budget shrinks below the plan's recorded peak: transparent capture
+    # must not replay it (it would blow the budget) — the episode runs
+    # eagerly and re-records a spill-aware plan under the new budget.
+    s.memory.pools[0].budget_bytes = plan.device_mem[0][1] - 1
+    episode()
+    st = s.stats()
+    assert st["plan_replays"] == 1           # no replay of the unfitting plan
+    assert st["plan_records"] == 2           # a spill-aware plan was recorded
+    # Explicit replay of an unfitting plan is refused outright.
+    with pytest.raises(DeviceOutOfMemoryError):
+        s.replay(plan)
+    episode()                                # the new plan replays fine
+    assert s.stats()["plan_replays"] == 2
+
+
+def test_replay_pins_plan_default_arrays_under_pressure():
+    """A replay under foreign memory pressure must never evict an array
+    the plan will bind later (e.g. persistent device-resident weights):
+    evicting one flips its location bits and guarantees a divergence at
+    its first use, so replay would never stick exactly in the out-of-core
+    regime it exists for."""
+    s = make_scheduler("parallel", simulate=True, memory_budget=6 * CHUNK)
+    w = s.array(np.ones(N, np.float32), name="pw_w")   # persistent weights
+
+    def episode(tag):
+        with s.capture("pin_ep"):
+            x = s.array(np.ones(N, np.float32), name=f"pw_x{tag}")
+            y = _stage(s)(x)
+            STAGE2.with_options(scheduler=s, cost_s=1e-4,
+                                name="pw_k2")(y, w)
+        s.sync()
+
+    episode(0)        # records with w host-resident (h2d traced)
+    episode(1)        # w now device-resident -> diverges, re-records
+    episode(2)        # replays the device-resident-w plan
+    assert s.stats()["plan_replays"] == 1
+    # Fill the budget with foreign arrays so w becomes the LRU victim
+    # candidate during the next replay's dynamic reservation.
+    foreign = [s.array(np.ones(N, np.float32), name=f"pw_f{i}")
+               for i in range(2)]
+    for f in foreign:
+        _stage(s)(f)
+    s.sync()
+    assert w.device_valid
+    episode(3)        # must still replay: w is pinned, foreign evicted
+    st = s.stats()
+    assert st["plan_replays"] == 2
+    assert w.device_valid and w.device_id == 0
+    assert st["mem_evict_blocks"] >= 1      # the pressure was real
+
+
+# ======================================================================
+# Satellite 1: forced H2D for multi-device host-only reads
+# ======================================================================
+
+@pytest.mark.parametrize("simulate", [True, False])
+def test_multidevice_forces_h2d_without_auto_prefetch(simulate):
+    s = make_scheduler("parallel", simulate=simulate, num_devices=2,
+                       auto_prefetch=False, placement="round-robin")
+    try:
+        x0 = s.array(np.full(N, 2.0, np.float32), name="fp_x0")
+        x1 = s.array(np.full(N, 3.0, np.float32), name="fp_x1")
+        y0 = _stage(s)(x0)                   # lands on device 0
+        y1 = _stage(s)(x1)                   # lands on device 1
+        elements = list(s._elements)
+        s.sync()
+        # The host-only read args were localized despite auto_prefetch=False.
+        h2d = [e for e in elements if e.kind is ElementKind.TRANSFER]
+        assert {e.args[0].array.name for e in h2d} >= {"fp_x0", "fp_x1"}
+        assert x0.device_valid and x1.device_valid
+        if not simulate:
+            assert np.allclose(np.asarray(y0), 5.0)
+            assert np.allclose(np.asarray(y1), 7.0)
+        assert_conservation(s, [x0, x1, y0, y1])
+    finally:
+        s.shutdown()
+
+
+def test_single_device_auto_prefetch_off_unchanged():
+    """The paper's fault-driven single-device mode stays prefetch-free."""
+    s = make_scheduler("parallel", simulate=True, auto_prefetch=False)
+    x = s.array(np.ones(N, np.float32), name="sd_x")
+    _stage(s)(x)
+    elements = list(s._elements)
+    s.sync()
+    assert not any(e.kind is ElementKind.TRANSFER for e in elements)
+
+
+# ======================================================================
+# Satellite 2: capture demotion cannot desync bits from residency
+# ======================================================================
+
+def test_capture_demotion_keeps_bits_and_residency_in_lockstep():
+    """Host-write demotion mid-replay: the un-flushed plan suffix (kernels
+    *and* transfers) is dropped, the episode finishes eagerly, and at every
+    step the logical location bits equal the tracked residency."""
+    s = make_scheduler("parallel", memory_budget=64 * CHUNK)
+    alive = []      # every episode's arrays: the conservation universe
+    try:
+        def episode(write_mid=False):
+            with s.capture("demote_ep"):
+                a = s.array(np.full(N, 1.0, np.float32), name="dm_a")
+                b = _stage(s)(a)
+                if write_mid:
+                    # a is plan-bound: the write must demote the replay.
+                    a.write(np.full(N, 10.0, np.float32))
+                c = s.array(np.full(N, 2.0, np.float32), name="dm_c")
+                d = _stage(s)(c)
+                alive.extend([a, b, c, d])
+                assert_conservation(s, alive)
+            s.sync()
+            assert_conservation(s, alive)
+            return a, b, c, d
+
+        episode()                             # record
+        episode()                             # replay
+        assert s.stats()["plan_replays"] == 1
+        a, b, c, d = episode(write_mid=True)  # demoted mid-replay
+        assert np.allclose(np.asarray(b), 3.0)      # pre-write result
+        assert np.allclose(np.asarray(d), 5.0)
+        assert np.allclose(np.asarray(a), 10.0)     # the host write stuck
+        assert_conservation(s, alive)
+        # The plan survives demotion: clean episodes keep replaying.
+        episode()
+        assert s.stats()["plan_replays"] >= 2
+    finally:
+        s.shutdown()
+
+
+def test_host_write_drops_residency_with_device_copy():
+    s = make_scheduler("parallel", simulate=True, memory_budget=8 * CHUNK)
+    x = s.array(np.ones(N, np.float32), name="hw_x")
+    y = _stage(s)(x)
+    s.sync()
+    assert s.memory.pools[0].resident_bytes == 2 * CHUNK
+    y.write(np.zeros(N, np.float32))          # host overwrite of the output
+    assert not y.device_valid and y.device_id is None
+    assert s.memory.pools[0].resident_bytes == CHUNK
+    assert_conservation(s, [x, y])
+
+
+# ======================================================================
+# Satellite 4: concurrent sync vs racing launches + conservation property
+# ======================================================================
+
+def test_concurrent_sync_vs_launch_stress():
+    """4 submitter threads race a syncing thread: the barrier must cover
+    work submitted during the unlocked drain, every element must complete,
+    and the final values must be correct."""
+    s = make_scheduler("parallel", num_devices=2, memory_budget=256 * CHUNK)
+    try:
+        stage = _stage(s)
+        results, errors = {}, []
+        start = threading.Barrier(5)
+
+        def submitter(tid):
+            try:
+                start.wait()
+                outs = []
+                for i in range(12):
+                    x = s.array(np.full(N, float(tid * 100 + i), np.float32),
+                                name=f"st{tid}_{i}")
+                    outs.append((tid * 100 + i, x, stage(x)))
+                    if i % 4 == 3:
+                        s.sync()
+                results[tid] = outs
+            except Exception as exc:          # pragma: no cover - fail path
+                errors.append(exc)
+
+        threads = [threading.Thread(target=submitter, args=(t,))
+                   for t in range(4)]
+        for t in threads:
+            t.start()
+        start.wait()
+        for _ in range(6):
+            s.sync()                          # racing barriers
+        for t in threads:
+            t.join()
+        s.sync()
+        assert not errors
+        # Barrier actually covered everything: every element retired and
+        # completed, values correct.
+        assert not s.dag.frontier
+        assert not s._elements
+        for tid, outs in results.items():
+            for val, _x, arr in outs:
+                assert np.allclose(np.asarray(arr), 2.0 * val + 1.0)
+        arrays = [a for outs in results.values()
+                  for _, x, arr in outs for a in (x, arr)]
+        assert_conservation(s, arrays)
+    finally:
+        s.shutdown()
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=2 ** 32 - 1))
+def test_memory_conservation_property(seed):
+    """At every step of a randomized workload, resident_bytes equals the
+    sum of nbytes over device-valid arrays — whatever mix of launches,
+    evictions, host reads and host writes got us there."""
+    rng = np.random.RandomState(seed)
+    s = make_scheduler("parallel", simulate=True, num_devices=2,
+                       placement="min-pressure",
+                       memory_budget=5 * CHUNK)
+    stage = _stage(s)
+    arrays = [s.array(rng.rand(N).astype(np.float32), name=f"pp_{i}")
+              for i in range(3)]
+    for step in range(20):
+        op = rng.randint(4)
+        if op == 0 and len(arrays) < 12:
+            arrays.append(s.array(rng.rand(N).astype(np.float32),
+                                  name=f"pp_n{step}"))
+        elif op == 1:
+            arrays.append(stage(arrays[rng.randint(len(arrays))]))
+        elif op == 2:
+            arrays[rng.randint(len(arrays))].read()
+        else:
+            arrays[rng.randint(len(arrays))].write(
+                rng.rand(N).astype(np.float32))
+        assert_conservation(s, arrays)
+    s.sync()
+    assert_conservation(s, arrays)
