@@ -1,18 +1,25 @@
-"""Memory benchmarks: Table I footprints + the out-of-core spill scenario.
+"""Memory benchmarks: Table I footprints + the out-of-core spill scenarios.
 
-Two parts:
+Three parts:
 
 * **Table I** — benchmark memory footprints across input scales/GPUs
   (which testbeds each workload fits in, unchanged from earlier PRs);
 * **Out-of-core** — the budgeted-memory acceptance run (ISSUE 5): the
   benchsuite two-pass streaming scenario with working set ≈ 2× the device
   budget, on the simulator (makespan vs the unlimited run) and on the real
-  executor (end-to-end correctness through spill + reload).  Results land
-  in ``BENCH_memory.json``.
+  executor (end-to-end correctness through spill + reload);
+* **Tiered spill** (ISSUE 6) — the same scenario pinned to a budgeted
+  device on two-device hardware with large, transfer-bound chunks, under
+  three spill policies: flat D2H (the PR 5 baseline), a peer-device tier
+  (spill over the fast D2D link to the idle device) and a lossy
+  compressed-host tier (half wire volume).  Per-tier spill/reload bytes
+  land in ``BENCH_memory.json``.
 
-The run **fails fast** when the budgeted scenario records zero spills —
-that would mean the benchmark stopped exercising the spill path and the
-acceptance numbers are vacuous.
+The run **fails fast** when the budgeted scenario records zero spills,
+when a tiered run stops using its tier, or when a tiered makespan is
+*slower* than flat D2H (peer must be strictly faster) — that would mean
+the tier stack stopped doing its job and the acceptance numbers are
+vacuous.
 """
 from __future__ import annotations
 
@@ -21,7 +28,7 @@ import json
 from repro.benchsuite import BENCHMARKS, GPUS
 from repro.benchsuite.outofcore import (build_outofcore, verify_outofcore,
                                         working_set_bytes)
-from repro.core import make_scheduler
+from repro.core import CompressedHostTier, PeerDeviceTier, make_scheduler
 
 from .common import emit
 
@@ -42,6 +49,24 @@ def run_outofcore(budget, *, simulate: bool, chunks: int, n: int) -> dict:
         s.sync()
         return {"makespan_s": s.timeline.makespan, "correct": bool(ok),
                 **_mem_stats(s)}
+    finally:
+        s.shutdown()
+
+
+def run_tiered(tiers, *, chunks: int, n: int, cost_s: float = 1e-5) -> dict:
+    """One tiered-spill simulation: two devices, the compute pinned to a
+    budgeted device 0 (budget = half the working set) with device 1 idle
+    and unbounded, so the tier stack competes on *spill placement* alone.
+    ``tiers=None`` is the flat-D2H baseline on identical hardware."""
+    budget = {0: working_set_bytes(chunks, n) // 2, 1: None}
+    s = make_scheduler("parallel", simulate=True, num_devices=2,
+                       memory_budget=budget, spill_tiers=tiers)
+    try:
+        build_outofcore(s, chunks=chunks, n=n, cost_s=cost_s, device=0)
+        s.sync()
+        tier_stats = s.stats().get("mem_tiers", {})
+        return {"makespan_s": s.timeline.makespan, **_mem_stats(s),
+                "tiers": tier_stats}
     finally:
         s.shutdown()
 
@@ -81,10 +106,31 @@ def main(smoke: bool = False) -> list:
     rows.append(("outofcore/real/budgeted", real["makespan_s"] * 1e6,
                  f"spills={real['mem_spills']} correct={real['correct']}"))
 
+    # Tiered-spill comparison: transfer-bound chunks (a 4 MiB chunk costs
+    # ~350 us over PCIe vs ~84 us over the D2D link) so spill *placement*
+    # is what the makespan measures.
+    t_chunks, t_n = (6, 1 << 16) if smoke else (8, 1 << 20)
+    flat = run_tiered(None, chunks=t_chunks, n=t_n)
+    peer = run_tiered([PeerDeviceTier()], chunks=t_chunks, n=t_n)
+    comp = run_tiered([CompressedHostTier(lossy=True)],
+                      chunks=t_chunks, n=t_n)
+    peer_ratio = flat["makespan_s"] / max(peer["makespan_s"], 1e-12)
+    comp_ratio = flat["makespan_s"] / max(comp["makespan_s"], 1e-12)
+    rows.append(("outofcore/tiered/flat-d2h", flat["makespan_s"] * 1e6,
+                 f"spills={flat['mem_spills']}"))
+    rows.append(("outofcore/tiered/peer-device", peer["makespan_s"] * 1e6,
+                 f"spills={peer['mem_spills']} speedup={peer_ratio:.2f}x"))
+    rows.append(("outofcore/tiered/compressed-host", comp["makespan_s"] * 1e6,
+                 f"spills={comp['mem_spills']} speedup={comp_ratio:.2f}x"))
+
     result = {"budget_bytes": budget,
               "working_set_bytes": working_set_bytes(chunks, n),
               "sim_unlimited": unlimited, "sim_budgeted": budgeted,
-              "real_budgeted": real, "makespan_ratio": ratio}
+              "real_budgeted": real, "makespan_ratio": ratio,
+              "tiered": {"flat_d2h": flat, "peer_device": peer,
+                         "compressed_host": comp,
+                         "peer_speedup": peer_ratio,
+                         "compressed_speedup": comp_ratio}}
     if not smoke:
         with open("BENCH_memory.json", "w") as f:
             json.dump(result, f, indent=2, sort_keys=True)
@@ -104,6 +150,24 @@ def main(smoke: bool = False) -> list:
     if ratio > RATIO_LIMIT:
         raise SystemExit(f"bench_memory: budgeted makespan is {ratio:.2f}x "
                          f"the unlimited run (limit {RATIO_LIMIT}x)")
+    # Tiered gates: each tier must actually take the spills routed at it,
+    # the peer tier must strictly beat flat D2H, and no tier may be slower
+    # than the flat baseline it is supposed to improve on.
+    peer_t = peer["tiers"].get("peer-device", {})
+    comp_t = comp["tiers"].get("compressed-host", {})
+    if peer_t.get("spills", 0) < 1 or comp_t.get("spills", 0) < 1:
+        raise SystemExit("bench_memory: a tiered run recorded zero tier "
+                         "spills — victims are bypassing the stack")
+    if peer["makespan_s"] >= flat["makespan_s"]:
+        raise SystemExit(
+            f"bench_memory: peer-device tier ({peer['makespan_s']*1e3:.3f} "
+            f"ms) is not faster than flat D2H "
+            f"({flat['makespan_s']*1e3:.3f} ms)")
+    if comp["makespan_s"] > flat["makespan_s"] * (1 + 1e-9):
+        raise SystemExit(
+            f"bench_memory: compressed-host tier "
+            f"({comp['makespan_s']*1e3:.3f} ms) is slower than flat D2H "
+            f"({flat['makespan_s']*1e3:.3f} ms)")
     return rows
 
 

@@ -18,12 +18,14 @@ explicitly or constructs runtimes by hand.
 from .core.frontend import (GrFunction, NoActiveRuntimeError, array,
                             current_runtime, function, get_runtime, runtime,
                             set_runtime)
-from .core import (AccessMode, Arg, GrScheduler, ManagedArray, const, inout,
-                   make_scheduler, out)
+from .core import (AccessMode, Arg, BackingTier, CompressedHostTier,
+                   DiskTier, GrScheduler, ManagedArray, PeerDeviceTier,
+                   const, inout, make_scheduler, out)
 
 __all__ = [
     "GrFunction", "NoActiveRuntimeError", "array", "current_runtime",
     "function", "get_runtime", "runtime", "set_runtime",
     "AccessMode", "Arg", "GrScheduler", "ManagedArray", "const", "inout",
     "make_scheduler", "out",
+    "BackingTier", "CompressedHostTier", "DiskTier", "PeerDeviceTier",
 ]

@@ -52,11 +52,19 @@ def working_set_bytes(chunks: int = 8, n: int = 1 << 14) -> int:
 
 
 def build_outofcore(sched: GrScheduler, *, chunks: int = 8, n: int = 1 << 14,
-                    cost_s: float = 1e-3, seed: int = 0) -> Dict[str, List]:
+                    cost_s: float = 1e-3, seed: int = 0,
+                    device: int = None) -> Dict[str, List]:
     """Issue the two-pass pipeline; returns the chunk arrays for
-    verification (``z[i] == 4*x[i] + 3`` elementwise)."""
+    verification (``z[i] == 4*x[i] + 3`` elementwise).
+
+    ``device`` pins every stage to one device (bypassing placement) — the
+    tiered-spill benchmark uses it to keep the *compute* on the budgeted
+    device so a peer-device tier competes on spill placement alone, not on
+    work stealing."""
     rng = np.random.RandomState(seed)
     stage = OOC_STAGE.with_options(scheduler=sched, cost_s=cost_s)
+    if device is not None:
+        stage = stage.with_options(device=device)
     xs = [sched.array(rng.rand(n).astype(np.float32), name=f"ooc_x{i}")
           for i in range(chunks)]
     ys = [stage.with_options(name=f"ooc_p1_{i}")(x)

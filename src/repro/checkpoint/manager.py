@@ -46,6 +46,11 @@ class CheckpointManager:
         self.keep = keep
         self.async_save = async_save
         self._thread: Optional[threading.Thread] = None
+        # Snapshot-through-spill accounting (save_managed): blocks whose
+        # bytes were referenced from a spill tier instead of copied again.
+        self.spill_links = 0
+        self.spill_link_bytes = 0
+        self.tier_reads = 0
         os.makedirs(directory, exist_ok=True)
 
     # ------------------------------------------------------------------
@@ -80,6 +85,123 @@ class CheckpointManager:
             self._thread.start()
         else:
             write()
+
+    # ------------------------------------------------------------------
+    def save_managed(self, step: int, arrays, extra: Optional[dict] = None,
+                     ) -> dict:
+        """Persist a ``{name: ManagedArray}`` mapping with
+        **snapshot-through-spill**: a block the memory subsystem has already
+        written to a backing tier is *referenced* instead of copied again.
+
+        * Disk-tier blocks: the published spool file (tiers.py writes it
+          tmp+rename, so the inode is immutable — a later re-spill replaces
+          the file, never rewrites it) is **hard-linked** into the
+          checkpoint, a metadata-only operation.
+        * Compressed-tier blocks: the payload is decoded host-side through
+          ``tier.peek`` — no device hop, and the spill stays resident.
+        * Host-valid blocks are snapshotted from the host buffer; dirty
+          device-resident blocks take the ordinary synchronized D2H first.
+
+        Returns per-save reuse stats (also accumulated on the manager).
+        File layout and manifest match :meth:`save`, so
+        :meth:`restore_managed` / :meth:`latest_step` / ``keep``-GC all
+        apply unchanged."""
+        self.wait()                          # one in-flight save at a time
+        tmp = os.path.join(self.dir, f"step_{step}.tmp")
+        final = os.path.join(self.dir, f"step_{step}")
+        shutil.rmtree(tmp, ignore_errors=True)
+        os.makedirs(tmp)
+        stats = {"leaves": 0, "spill_links": 0, "spill_link_bytes": 0,
+                 "tier_reads": 0, "copied": 0}
+        manifest = {}
+        pending = []                         # (file, np.ndarray) to np.save
+        for name, ma in dict(arrays).items():
+            fn = name.replace("/", "__") + ".npy"
+            stats["leaves"] += 1
+            entry = {"file": fn, "dtype": str(ma.dtype),
+                     "shape": list(ma.shape)}
+            tier = self._tier_of(ma)
+            linked = False
+            path = None
+            if tier is not None and hasattr(tier, "path_for"):
+                from ..core.element import dep_key
+                path = tier.path_for(dep_key(ma))
+            if path is not None:
+                try:
+                    # Hard-link the published spool payload: copy-on-write
+                    # snapshot, zero data movement.  Links are taken
+                    # synchronously — an async deferral could race the
+                    # block's reload (which removes the spool file).
+                    os.link(path, os.path.join(tmp, fn))
+                    linked = True
+                    stats["spill_links"] += 1
+                    stats["spill_link_bytes"] += ma.nbytes
+                    entry["via"] = "spill-link"
+                except OSError:              # cross-device link etc.
+                    shutil.copyfile(path, os.path.join(tmp, fn))
+                    linked = True
+                    stats["tier_reads"] += 1
+                    entry["via"] = "spill-copy"
+            if not linked:
+                if tier is not None:
+                    val = tier.peek(ma)
+                    if val is not None:
+                        stats["tier_reads"] += 1
+                        entry["via"] = "tier-read"
+                        pending.append((fn, np.array(val)))
+                        manifest[name] = entry
+                        continue
+                # Ordinary path: synchronized host snapshot (D2H if the
+                # device copy is the only valid one).
+                if not getattr(ma, "host_valid", True):
+                    ma.read()
+                stats["copied"] += 1
+                pending.append((fn, np.array(ma.host)))
+            manifest[name] = entry
+        self.spill_links += stats["spill_links"]
+        self.spill_link_bytes += stats["spill_link_bytes"]
+        self.tier_reads += stats["tier_reads"]
+
+        def write():
+            for fn, arr in pending:
+                np.save(os.path.join(tmp, fn), arr)
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump({"step": step, "leaves": manifest,
+                           "extra": extra or {}}, f)
+            shutil.rmtree(final, ignore_errors=True)
+            os.rename(tmp, final)            # atomic publish
+            self._gc()
+
+        if self.async_save:
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+        else:
+            write()
+        return stats
+
+    @staticmethod
+    def _tier_of(ma) -> Optional[Any]:
+        tname = getattr(ma, "backing_tier", None)
+        if tname is None:
+            return None
+        sched = getattr(ma, "_scheduler", None)
+        mem = getattr(sched, "memory", None)
+        return mem.tier_named(tname) if mem is not None else None
+
+    def restore_managed(self, arrays, step: Optional[int] = None) -> None:
+        """Load a checkpoint written by :meth:`save_managed` back into a
+        ``{name: ManagedArray}`` mapping (host writes through the managed
+        API, so location bits and DAG ordering stay correct)."""
+        self.wait()
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        d = os.path.join(self.dir, f"step_{step}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)["leaves"]
+        for name, ma in dict(arrays).items():
+            ma.write(np.load(os.path.join(d, manifest[name]["file"])))
 
     def wait(self) -> None:
         if self._thread is not None:

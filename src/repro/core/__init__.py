@@ -11,6 +11,8 @@ from .streams import (DataAffinityPlacement, Lane, MinLoadPlacement,
                       PLACEMENT_POLICIES, RoundRobinPlacement, StreamManager)
 from .managed import ManagedArray
 from .memory import DeviceOutOfMemoryError, MemoryManager, MemoryPool
+from .tiers import (BackingTier, CompressedHostTier, DiskTier,
+                    PeerDeviceTier, make_tiers)
 from .submission import SubmissionPipeline
 from .timeline import Timeline, Span
 from .history import KernelHistory
@@ -31,6 +33,8 @@ __all__ = [
     "Lane", "PlacementPolicy", "PLACEMENT_POLICIES", "RoundRobinPlacement",
     "MinLoadPlacement", "DataAffinityPlacement", "MinPressurePlacement",
     "DeviceOutOfMemoryError", "MemoryManager", "MemoryPool",
+    "BackingTier", "CompressedHostTier", "DiskTier", "PeerDeviceTier",
+    "make_tiers",
     "ManagedArray", "Timeline", "Span", "KernelHistory",
     "Executor", "SimExecutor", "SimHardware", "ThreadLaneExecutor",
     "GrScheduler", "make_scheduler",

@@ -94,6 +94,11 @@ class SlotSpec:
     host_valid: bool
     device_valid: bool
     device_id: Optional[int]
+    # Backing tier holding the array at capture time (None = not spilled).
+    # Part of the slot state: a plan recorded against a disk-resident array
+    # replays a disk RELOAD, which would read the wrong payload for an
+    # array parked in (say) the compressed tier.
+    tier: Optional[str] = None
 
     def geometry_matches(self, array: Any) -> bool:
         shape = getattr(array, "shape", None)
@@ -104,7 +109,8 @@ class SlotSpec:
     def state_matches(self, array: Any) -> bool:
         return (bool(getattr(array, "host_valid", False)) == self.host_valid
                 and bool(getattr(array, "device_valid", False)) == self.device_valid
-                and getattr(array, "device_id", None) == self.device_id)
+                and getattr(array, "device_id", None) == self.device_id
+                and getattr(array, "backing_tier", None) == self.tier)
 
 
 def _slot_spec(index: int, array: Any) -> SlotSpec:
@@ -118,7 +124,8 @@ def _slot_spec(index: int, array: Any) -> SlotSpec:
         nbytes=int(getattr(array, "nbytes", 0)),
         host_valid=bool(getattr(array, "host_valid", False)),
         device_valid=bool(getattr(array, "device_valid", False)),
-        device_id=getattr(array, "device_id", None))
+        device_id=getattr(array, "device_id", None),
+        tier=getattr(array, "backing_tier", None))
 
 
 @dataclass(frozen=True)
@@ -338,10 +345,13 @@ def _plan_device_mem(drafts: Sequence[_Draft], slots: Sequence[SlotSpec]
         if s.device_valid:
             move(s.index, s.device_id if s.device_id is not None else 0)
     for d in drafts:
-        if d.kind in (ElementKind.TRANSFER, ElementKind.D2D):
+        if d.kind in (ElementKind.TRANSFER, ElementKind.D2D,
+                      ElementKind.RELOAD):
             move(d.arg_slots[0][0], d.device)
         elif d.kind is ElementKind.EVICT:
-            move(d.arg_slots[0][0], None)
+            # A peer-tier spill keeps the block device-resident on the spill
+            # target (its budget is gated too); other evictions drop it.
+            move(d.arg_slots[0][0], d.raw_config.get("spill_target"))
         else:
             for slot, mode in d.arg_slots:
                 if mode.writes:
@@ -395,7 +405,7 @@ class _Recorder:
                 index=new_idx, name=spec.name, shape=spec.shape,
                 dtype=spec.dtype, nbytes=spec.nbytes,
                 host_valid=spec.host_valid, device_valid=spec.device_valid,
-                device_id=spec.device_id))
+                device_id=spec.device_id, tier=spec.tier))
             self.slot_arrays.append(arr)
         for ce in r.new_elements:
             self.record(ce)
@@ -529,7 +539,15 @@ def _apply_location_bits(sched, pe: PlanElement, bound: List[Any]) -> None:
     elif pe.kind is ElementKind.D2D:
         mem.note_d2d(bound[pe.arg_slots[0][0]], pe.device)
     elif pe.kind is ElementKind.EVICT:
-        mem.note_evict(bound[pe.arg_slots[0][0]])
+        cfg = dict(pe.config)
+        tier = mem.tier_named(cfg["tier"]) if cfg.get("tier") else None
+        if tier is not None:
+            mem.note_spill(bound[pe.arg_slots[0][0]], tier,
+                           cfg.get("spill_target"), pe.transfer_bytes)
+        else:
+            mem.note_evict(bound[pe.arg_slots[0][0]])
+    elif pe.kind is ElementKind.RELOAD:
+        mem.note_reload(bound[pe.arg_slots[0][0]], pe.device)
     else:
         for slot, mode in pe.arg_slots:
             if mode.writes:
@@ -571,6 +589,13 @@ def _flush_range(sched, r: _ReplayState, hi_inclusive: int,
             priority=pe.priority, tenant=pe.tenant, fn_key=pe.fn_key)
         ce.device = pe.device
         ce.src_device = pe.src_device
+        if pe.kind in (ElementKind.EVICT, ElementKind.RELOAD):
+            # Re-resolve the tier by name against the *current* stack: the
+            # plan records only the tier name (part of the frozen config),
+            # never the runtime object.
+            tname = plan.configs[idx].get("tier")
+            if tname:
+                ce.tier = sched.memory.tier_named(tname)
         if bounded and pe.kind is not ElementKind.EVICT:
             # Replays reserve dynamically too: plan gating guarantees the
             # plan's *own* peak fits the budget, but stale foreign arrays
@@ -656,6 +681,13 @@ def replay_plan(sched, plan: ExecutionPlan,
                 f"slot {spec.name!r}: the plan replays a host->device "
                 f"transfer but the array's host copy is stale "
                 f"(host_valid=False); read it back or rebind before replay")
+        if spec.tier != getattr(arr, "backing_tier", None):
+            raise ValueError(
+                f"slot {spec.name!r} was captured "
+                f"{'in tier ' + repr(spec.tier) if spec.tier else 'untiered'}"
+                f" but the bound array is "
+                f"{'in tier ' + repr(arr.backing_tier) if getattr(arr, 'backing_tier', None) else 'not tier-resident'};"
+                f" the recorded reload structure would read the wrong payload")
         if spec.device_valid:
             if not getattr(arr, "device_valid", False):
                 raise ValueError(

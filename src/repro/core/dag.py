@@ -242,6 +242,11 @@ class ComputationDAG:
         for e in list(self.frontier):
             e.active = False
         self.frontier.clear()
+        # A full barrier retires *everything*: sweep unconditionally so no
+        # dead ``_ArrayState`` pins retired elements (and through their args,
+        # the arrays — a tier-spilled block must become collectable here for
+        # its GC finalizer to release the spool payload).
+        self._sweep_at = 0
         self._sweep()
 
     # ------------------------------------------------------------------

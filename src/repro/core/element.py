@@ -92,6 +92,7 @@ class ElementKind(enum.Enum):
     TRANSFER = "transfer"        # H2D prefetch / D2H copy (scheduled by runtime)
     D2D = "d2d"                  # device-to-device copy (multi-device runtime)
     EVICT = "evict"              # budget spill: async D2H + drop device copy
+    RELOAD = "reload"            # bring a tier-spilled block back on-device
     LIBRARY = "library"          # pre-registered library call (§IV-A)
     SYNC = "sync"                # explicit barrier requested by the host
 
@@ -129,6 +130,11 @@ class ComputationalElement:
     # different declarations never share one.  ``None`` for legacy
     # ``scheduler.launch`` call sites; capture/replay keys plans by it.
     fn_key: Optional[int] = None
+
+    # Backing tier driving this EVICT/RELOAD (runtime object, not part of
+    # the structural signature — capture encodes the tier *name* in
+    # ``config`` and replay re-resolves it against the scheduler's stack).
+    tier: Any = None
 
     # -- filled in by the scheduler --
     uid: int = field(default_factory=lambda: next(_ELEMENT_IDS))

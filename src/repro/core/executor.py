@@ -107,13 +107,37 @@ def _run_device_element(e: ComputationalElement, jdev=None):
         return
 
     if e.kind is ElementKind.EVICT:
-        # Budget spill: write the device copy back to the host buffer when
-        # it was the only valid one, then actually release the device
-        # buffer (dropping the reference frees the backing device memory).
         ma = e.args[0].array
+        tier = e.tier
+        if tier is not None and tier.location == "device":
+            # Peer-device spill: a D2D copy onto the tier's target device
+            # (the lane — and jdev — belong to the target, like any D2D).
+            val = jax.device_put(ma.device_value(), jdev)
+            if hasattr(val, "block_until_ready"):
+                val.block_until_ready()
+            ma.set_physical_device(val)
+            return
+        if tier is not None:
+            # Host-side tier: store/encode the payload (compressed bytes,
+            # spool file), then release the device buffer.
+            tier.spill(ma)
+            ma.set_physical_device(None)
+            return
+        # Flat budget spill: write the device copy back to the host buffer
+        # when it was the only valid one, then actually release the device
+        # buffer (dropping the reference frees the backing device memory).
         if e.config.get("writeback", True) and ma.device is not None:
             np.copyto(ma.host, np.asarray(ma.device))
         ma.set_physical_device(None)
+        return
+
+    if e.kind is ElementKind.RELOAD:
+        # Bring a tier-spilled block back: the tier decodes/reads the
+        # payload (refreshing ma.host) and the copy engine uploads it.
+        ma = e.args[0].array
+        val = jax.device_put(np.asarray(e.tier.reload(ma)), jdev)
+        val.block_until_ready()
+        ma.set_physical_device(val)
         return
 
     inputs = [a.array.device_value() for a in e.args]
@@ -152,15 +176,18 @@ class _LaneWorker(threading.Thread):
                 return
             element, waits = item
             try:
-                for p in waits:
-                    p.done_event.wait()
+                while waits:        # pop: no loop variable may outlive the
+                    waits.pop().done_event.wait()   # wait (see finally below)
                 t0 = self.executor.host_now()
                 _run_device_element(element,
                                     self.executor.jax_device_for(element))
                 t1 = self.executor.host_now()
                 element.t_start, element.t_end = t0, t1
-                kind = ("h2d" if element.kind is ElementKind.TRANSFER
-                        else "d2d" if element.kind is ElementKind.D2D
+                kind = ("h2d" if element.kind in (ElementKind.TRANSFER,
+                                                 ElementKind.RELOAD)
+                        else "d2d" if (element.kind is ElementKind.D2D
+                                       or (element.kind is ElementKind.EVICT
+                                           and element.src_device is not None))
                         else "d2h" if element.kind is ElementKind.EVICT
                         else "compute")
                 self.executor.timeline.record(
@@ -175,6 +202,11 @@ class _LaneWorker(threading.Thread):
             finally:
                 element.done_event.set()
                 self.q.task_done()
+                # An idle worker blocked on q.get must not keep its last
+                # element's graph (and, through the args, the arrays)
+                # reachable: tier-spilled blocks rely on GC finalizers to
+                # release their spool payloads.
+                del item, element, waits
 
 
 class ThreadLaneExecutor(Executor):
@@ -302,6 +334,9 @@ class _SimTask:
     rate: float = 0.0
     t_start: float = float("nan")
     weight: float = 1.0         # priority weight for the capacity water-fill
+    # Per-tier bandwidth override (GB/s): a disk-tier spill occupies its
+    # copy engine at disk rate, not at link rate.  None = engine default.
+    gbps: Optional[float] = None
 
 
 class SimExecutor(Executor):
@@ -350,8 +385,14 @@ class SimExecutor(Executor):
             work = float(element.transfer_bytes)
         elif element.kind is ElementKind.EVICT:
             # Spill write-back occupies the D2H engine for its byte count;
-            # clean drops (transfer_bytes == 0) complete instantly.
-            kind = "d2h"
+            # clean drops (transfer_bytes == 0) complete instantly.  A
+            # peer-tier spill (src_device set) runs on the D2D link instead.
+            kind = "d2d" if element.src_device is not None else "d2h"
+            work = float(element.transfer_bytes)
+        elif element.kind is ElementKind.RELOAD:
+            # Tier reload: the H2D engine is occupied for the upload (at
+            # the tier's bandwidth when it is the slower stage of the pipe).
+            kind = "h2d"
             work = float(element.transfer_bytes)
         else:
             kind = "compute"
@@ -369,7 +410,8 @@ class SimExecutor(Executor):
                         pf=pf, lane=lane_id, issue_t=self.host_time,
                         device=min(element.device or 0, top),
                         src_device=min(element.src_device or 0, top),
-                        weight=element.weight)
+                        weight=element.weight,
+                        gbps=element.config.get("tier_gbps"))
         element.t_issue = self.host_time
         self._pending.append(task)
         self._lane_q.setdefault(lane_id, deque()).append(element.uid)
@@ -428,7 +470,7 @@ class SimExecutor(Executor):
             for xs in engines.values():
                 xs.sort(key=lambda t: (t.t_start, t.element.uid))
                 for i, t in enumerate(xs):
-                    t.rate = bw * 1e9 if i == 0 else 0.0
+                    t.rate = (t.gbps or bw) * 1e9 if i == 0 else 0.0
         # One point-to-point link per ordered (src, dst) device pair.
         links: Dict[tuple, List[_SimTask]] = {}
         for t in self._running:
@@ -437,7 +479,7 @@ class SimExecutor(Executor):
         for xs in links.values():
             xs.sort(key=lambda t: (t.t_start, t.element.uid))
             for i, t in enumerate(xs):
-                t.rate = self.hw.d2d_gbps * 1e9 if i == 0 else 0.0
+                t.rate = (t.gbps or self.hw.d2d_gbps) * 1e9 if i == 0 else 0.0
 
     # -- event loop ------------------------------------------------------
     def _advance_to(self, target: float) -> None:

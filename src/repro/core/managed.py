@@ -39,6 +39,11 @@ class ManagedArray:
         # Which device owns the current device copy (single-copy model: a
         # cross-device consumer triggers a D2D element that moves ownership).
         self.device_id: Optional[int] = None
+        # Name of the backing tier (tiers.py) currently holding the only
+        # valid copy off-device, or None.  Set/cleared exclusively by the
+        # MemoryManager's note_spill/note_reload transitions; part of the
+        # capture slot state so replayed plans reload from the right tier.
+        self.backing_tier: Optional[str] = None
         self.aid = next(_ARRAY_IDS)
         self.name = name or f"arr{self.aid}"
 

@@ -36,6 +36,7 @@ from typing import (Any, Callable, Dict, Iterable, List, Mapping, Optional,
                     Sequence, Tuple, Union)
 
 from .element import dep_key
+from .tiers import BackingTier, make_tiers
 
 Budget = Union[None, int, Mapping[int, Optional[int]]]
 
@@ -103,9 +104,17 @@ class MemoryPool:
     def lru_keys(self) -> List[int]:
         return list(self._resident)
 
+    @property
+    def occupancy(self) -> float:
+        """Resident/budget fraction (0.0 when unlimited)."""
+        if not self.budget_bytes:
+            return 0.0
+        return self.resident_bytes / self.budget_bytes
+
     def stats(self) -> dict:
         return {"resident_bytes": self.resident_bytes,
                 "peak_bytes": self.peak_bytes,
+                "occupancy": self.occupancy,
                 "spills": self.spills,
                 "spill_bytes": self.spill_bytes,
                 "evict_blocks": self.evict_blocks}
@@ -128,7 +137,8 @@ class MemoryManager:
     anywhere, so pool mutations take a private lock.
     """
 
-    def __init__(self, num_devices: int = 1, budget: Budget = None) -> None:
+    def __init__(self, num_devices: int = 1, budget: Budget = None,
+                 tiers: Optional[Sequence[Any]] = None) -> None:
         self.num_devices = max(1, num_devices)
         if isinstance(budget, Mapping):
             per_dev = [budget.get(d) for d in range(self.num_devices)]
@@ -141,6 +151,17 @@ class MemoryManager:
         # finalizer drops residency when an array is GC'd mid-episode, so
         # long-running serving loops cannot leak pool accounting.
         self._where: Dict[int, Tuple[int, "weakref.ref"]] = {}
+        # Ordered spill stack (tiers.py).  Empty stack == PR 5 flat D2H.
+        self.tiers: List[BackingTier] = make_tiers(tiers)
+        for t in self.tiers:
+            t.bind(self)
+        # key -> (tier, weakref|None) for blocks a tier currently tracks.
+        # Host tiers hold the block's only valid copy (backing_tier set on
+        # the array); the peer tier only tracks membership for stats — the
+        # block stays an ordinary device-resident entry in the peer's pool.
+        # The weakref finalizer drops physical tier payloads (compressed
+        # bytes, spool files) when an array is GC'd while spilled.
+        self._tier_of: Dict[int, Tuple[BackingTier, Any]] = {}
 
     # ------------------------------------------------------------------
     @property
@@ -156,6 +177,46 @@ class MemoryManager:
             entry = self._where.pop(key, None)
             if entry is not None:
                 self.pools[entry[0]].discard(key)
+            self._tier_release(key)
+
+    # -- tier stack ----------------------------------------------------
+    def tier_named(self, name: str) -> Optional[BackingTier]:
+        for t in self.tiers:
+            if t.name == name:
+                return t
+        return None
+
+    def select_tier(self, ma: Any):
+        """Ask the ordered stack where a *dirty* victim should land.
+
+        Returns ``(tier, plan)`` from the first tier that accepts the block
+        (``plan`` is the tier's schedule-time spill description, see
+        ``BackingTier.plan_spill``) or ``(None, None)`` — the flat PR 5
+        D2H spill.  Clean victims never reach here: their bytes already
+        live in the host buffer, so dropping the device copy is free."""
+        nb = _nbytes(ma)
+        src = getattr(ma, "device_id", None)
+        for tier in self.tiers:
+            if not tier.can_accept(nb, src):
+                continue
+            plan = tier.plan_spill(ma)
+            if tier.location == "device" and plan.get("target") is None:
+                continue        # raced out of peer room; try the next tier
+            return tier, plan
+        return None, None
+
+    def _tier_release(self, key: int, reload: bool = False) -> None:
+        """A tier-tracked block left its tier (reload, overwrite, GC,
+        re-eviction).  Must hold the manager lock."""
+        entry = self._tier_of.pop(key, None)
+        if entry is None:
+            return
+        tier = entry[0]
+        if reload:
+            tier.note_reload(key)
+        else:
+            tier.note_release(key)
+            tier.drop(key)      # physical payload is garbage now
 
     def _make_resident(self, ma: Any, device: int) -> None:
         nb = _nbytes(ma)
@@ -198,16 +259,23 @@ class MemoryManager:
 
     def note_d2d(self, ma: Any, device: int) -> None:
         """A D2D migration of ``ma`` onto ``device`` was scheduled (or an
-        unowned device copy was claimed): single-copy ownership moves."""
+        unowned device copy was claimed): single-copy ownership moves.
+        A peer-tier-parked block consumed this way counts as its reload."""
         ma.device_id = device
+        with self._lock:
+            self._tier_release(dep_key(ma), reload=True)
         self._make_resident(ma, device)
 
     def note_device_write(self, ma: Any, device: int) -> None:
         """A kernel writing ``ma`` on ``device`` was scheduled: the device
-        copy becomes the only valid one."""
+        copy becomes the only valid one (any tier payload is stale)."""
         ma.device_valid = True
         ma.host_valid = False
         ma.device_id = device
+        if getattr(ma, "backing_tier", None) is not None:
+            ma.backing_tier = None
+        with self._lock:
+            self._tier_release(dep_key(ma))
         self._make_resident(ma, device)
 
     def note_evict(self, ma: Any) -> bool:
@@ -222,20 +290,87 @@ class MemoryManager:
         ma.device_id = None
         self._drop_residency(ma)
         with self._lock:
+            self._tier_release(dep_key(ma))
             pool.evict_blocks += 1
             if dirty:
                 pool.spills += 1
                 pool.spill_bytes += _nbytes(ma)
         return dirty
 
+    def note_spill(self, ma: Any, tier: BackingTier,
+                   target: Optional[int] = None,
+                   wire_bytes: Optional[int] = None) -> None:
+        """A tiered spill of dirty ``ma`` was scheduled.
+
+        Peer tier (``location == "device"``): the block becomes an ordinary
+        device-resident entry on ``target`` — its host copy stays stale and
+        the migrate stage's plain D2D brings it back when next consumed.
+
+        Host tiers (compressed / disk): the tier payload becomes the only
+        valid copy — host *and* device bits clear and ``backing_tier``
+        names the holder, so consumers synthesize a RELOAD and capture
+        slot-state distinguishes tier residency."""
+        nb = _nbytes(ma)
+        key = dep_key(ma)
+        src = getattr(ma, "device_id", None)
+        pool = self.pool(src if src is not None else 0)
+        with self._lock:
+            self._tier_release(key)     # re-spill replaces any old entry
+            pool.evict_blocks += 1
+            pool.spills += 1
+            pool.spill_bytes += nb
+            tier.note_spill(key, nb, nb if wire_bytes is None else wire_bytes)
+            if tier.location == "device":
+                ma.device_valid = True
+                ma.device_id = target
+                self._tier_of[key] = (tier, None)
+                self._make_resident(ma, target if target is not None else 0)
+                return
+            ma.host_valid = False
+            ma.device_valid = False
+            ma.device_id = None
+            ma.backing_tier = tier.name
+            self._drop_residency(ma)
+            try:
+                ref = weakref.ref(ma, lambda _r, k=key: self._on_dead(k))
+            except TypeError:           # plain test doubles
+                ref = None
+            self._tier_of[key] = (tier, ref)
+
+    def note_reload(self, ma: Any, device: int) -> None:
+        """A RELOAD of ``ma`` from its host tier onto ``device`` was
+        scheduled: the tier handler restores the host buffer and the copy
+        engine uploads it, so both copies become valid."""
+        with self._lock:
+            self._tier_release(dep_key(ma), reload=True)
+        ma.backing_tier = None
+        ma.host_valid = True
+        ma.device_valid = True
+        ma.device_id = device
+        self._make_resident(ma, device)
+
+    def note_tier_to_host(self, ma: Any) -> None:
+        """The host read a tier-resident block (no device upload): the tier
+        handler restored ``ma.host`` and the payload is released."""
+        with self._lock:
+            self._tier_release(dep_key(ma), reload=True)
+        ma.backing_tier = None
+        ma.host_valid = True
+        ma.device_valid = False
+        ma.device_id = None
+
     def note_host_overwrite(self, ma: Any) -> None:
         """The host mutated ``ma.host``: the device copy (if any) is stale
         and no device owns a valid copy anymore (see managed.py for why
-        ``device_id`` must clear too)."""
+        ``device_id`` must clear too).  Any tier payload is stale with it."""
         ma.host_valid = True
         if ma.device_valid or ma.device_id is not None:
             ma.device_valid = False
             ma.device_id = None
+        if getattr(ma, "backing_tier", None) is not None:
+            ma.backing_tier = None
+        with self._lock:
+            self._tier_release(dep_key(ma))
         self._drop_residency(ma)
 
     # ------------------------------------------------------------------
@@ -359,12 +494,91 @@ class MemoryManager:
         agg = {"resident_bytes": 0, "peak_bytes": 0, "spills": 0,
                "spill_bytes": 0, "evict_blocks": 0}
         per = {}
+        bounded_res = bounded_budget = 0
         for p in self.pools:
             s = p.stats()
             per[p.device_id] = dict(s, budget_bytes=p.budget_bytes)
             for k in agg:
                 agg[k] += s[k]
+            if p.budget_bytes:
+                bounded_res += p.resident_bytes
+                bounded_budget += p.budget_bytes
         out = {f"mem_{k}": v for k, v in agg.items()}
+        # Pressure alarm input: resident/budget over the *bounded* pools
+        # (0.0 when every pool is unlimited, like MemoryPool.occupancy).
+        out["mem_occupancy"] = (bounded_res / bounded_budget
+                                if bounded_budget else 0.0)
         if self.num_devices > 1:
             out["mem_per_device"] = per
+        if self.tiers:
+            out["mem_tiers"] = {t.name: t.stats() for t in self.tiers}
         return out
+
+    def verify(self) -> List[str]:
+        """Debug hook: reconcile logical residency (array location bits,
+        tier membership) against the pool ledger.  Returns a list of
+        discrepancy strings — empty means the accounting is exact."""
+        problems: List[str] = []
+        with self._lock:
+            for p in self.pools:
+                ledger = sum(p._resident.values())
+                if ledger != p.resident_bytes:
+                    problems.append(
+                        f"pool {p.device_id}: resident_bytes="
+                        f"{p.resident_bytes} but ledger sums to {ledger}")
+                for k in p._resident:
+                    entry = self._where.get(k)
+                    if entry is None:
+                        problems.append(f"pool {p.device_id}: key {k} "
+                                        f"resident but untracked in _where")
+                    elif entry[0] != p.device_id:
+                        problems.append(
+                            f"key {k} in pool {p.device_id} but _where says "
+                            f"device {entry[0]}")
+            for k, (dev, ref) in self._where.items():
+                if k not in self.pools[dev]._resident:
+                    problems.append(f"_where key {k} on device {dev} "
+                                    f"missing from that pool's ledger")
+                ma = ref() if callable(ref) else None
+                if ma is None:
+                    continue
+                if not getattr(ma, "device_valid", True):
+                    problems.append(f"{getattr(ma, 'name', k)}: resident on "
+                                    f"device {dev} but device_valid is False")
+                elif getattr(ma, "device_id", dev) != dev:
+                    problems.append(
+                        f"{getattr(ma, 'name', k)}: pool says device {dev}, "
+                        f"array says {ma.device_id}")
+            for k, (tier, ref) in self._tier_of.items():
+                if not tier.holds(k):
+                    problems.append(f"key {k} tracked by tier {tier.name} "
+                                    f"but the tier's ledger dropped it")
+                if tier.location == "device":
+                    if k not in self._where:
+                        problems.append(f"peer-tier key {k} not device-"
+                                        f"resident anywhere")
+                    continue
+                if k in self._where:
+                    problems.append(f"{tier.name}-tier key {k} still "
+                                    f"device-resident")
+                ma = ref() if callable(ref) else None
+                if ma is not None and \
+                        getattr(ma, "backing_tier", None) != tier.name:
+                    problems.append(
+                        f"{getattr(ma, 'name', k)}: tier ledger says "
+                        f"{tier.name}, array says {ma.backing_tier!r}")
+            for t in self.tiers:
+                mine = {k for k, (tt, _r) in self._tier_of.items() if tt is t}
+                for k in list(t._resident):
+                    if k not in mine:
+                        problems.append(f"tier {t.name} holds key {k} the "
+                                        f"manager does not track")
+        return problems
+
+    def close(self) -> None:
+        """Release every tier's backing resources (spool directories,
+        compressed payloads).  Called from ``GrScheduler.shutdown()``."""
+        with self._lock:
+            self._tier_of.clear()
+        for t in self.tiers:
+            t.close()

@@ -52,7 +52,8 @@ class GrScheduler:
                  num_devices: int = 1,
                  placement: str = "round-robin",
                  tenant_quotas: Optional[Mapping[str, int]] = None,
-                 memory_budget: Budget = None) -> None:
+                 memory_budget: Budget = None,
+                 spill_tiers: Optional[Sequence] = None) -> None:
         assert policy in ("serial", "parallel")
         self.policy = policy
         self.num_devices = max(1, num_devices)
@@ -62,7 +63,11 @@ class GrScheduler:
         # Per-device byte budgets (None = unlimited): the MemoryManager owns
         # resident-set accounting and every logical location-bit flip; the
         # pipeline's reserve stage spills LRU victims when a budget is hit.
-        self.memory = MemoryManager(self.num_devices, memory_budget)
+        # ``spill_tiers`` is the ordered backing-tier stack (tiers.py) dirty
+        # victims fall through; empty/None keeps the flat D2H spill of PR 5
+        # bit for bit.
+        self.memory = MemoryManager(self.num_devices, memory_budget,
+                                    tiers=spill_tiers)
         self.streams = StreamManager(new_stream_policy, parent_stream_policy,
                                      max_lanes=max_lanes,
                                      num_devices=self.num_devices,
@@ -276,6 +281,8 @@ class GrScheduler:
                     continue    # a racing launch re-dirtied the array
                 if ma.device_valid and not ma.host_valid:
                     self._d2h(ma)
+                elif getattr(ma, "backing_tier", None) is not None:
+                    self._tier_restore(ma)
                 return
 
     def host_read(self, ma: ManagedArray) -> None:
@@ -304,6 +311,28 @@ class GrScheduler:
             ma.host = np.asarray(ma.device)
             ex.timeline.record(-1, f"d2h_{ma.name}", "d2h", None, t0, ex.host_now())
         ma.host_valid = True
+
+    def _tier_restore(self, ma: ManagedArray) -> None:
+        """Host access to a block parked in a host-side tier: restore the
+        host buffer synchronously (decompress / read the spool file) —
+        no device hop.  The simulator charges the tier's restore cost."""
+        tier = self.memory.tier_named(ma.backing_tier)
+        if tier is None:        # stack reconfigured under a live block
+            self.memory.note_tier_to_host(ma)
+            return
+        ex = self.executor
+        if isinstance(ex, SimExecutor):
+            t0 = ex.host_time
+            ex.host_time += tier.host_restore_seconds(ma.nbytes)
+            ex._advance_to(ex.host_time)
+            ex.timeline.record(-1, f"tier_{tier.name}_{ma.name}", "d2h",
+                               None, t0, ex.host_time)
+        else:
+            t0 = ex.host_now()
+            tier.reload(ma)     # refreshes ma.host, drops the payload
+            ex.timeline.record(-1, f"tier_{tier.name}_{ma.name}", "d2h",
+                               None, t0, ex.host_now())
+        self.memory.note_tier_to_host(ma)
 
     # ------------------------------------------------------------------
     # Graph capture & replay (capture.py, §V-D CUDA-Graphs analogue)
@@ -388,6 +417,9 @@ class GrScheduler:
 
     def shutdown(self) -> None:
         self.executor.shutdown()
+        # Release tier backing resources (spool directories, compressed
+        # payloads) — no leaked spool files after a scheduler is retired.
+        self.memory.close()
 
 
 # ----------------------------------------------------------------------

@@ -75,6 +75,11 @@ class SubmissionPipeline:
         # elements for LRU victims (spill D2H first, reload H2D after — the
         # copy engines see them in that order).
         self.reserve(e)
+        # Tier-resident read args (spilled to compressed host / disk) must
+        # come back regardless of ``auto_prefetch``: the fault-driven
+        # single-device mode can read a *host-valid* array in place, but a
+        # tier payload is not host-addressable until its RELOAD runs.
+        self.reload(e.args, e.device, priority=e.priority, tenant=e.tenant)
         # Host-resident read args must reach the device ahead of the kernel.
         # With auto_prefetch off on a single device the executor reads the
         # host copy in place (GrCUDA's fault-driven mode), but on multiple
@@ -120,20 +125,87 @@ class SubmissionPipeline:
         reader and the last writer of the array; the device copy is dropped
         at schedule time (logical bits + residency via the MemoryManager),
         the executors perform the physical write-back/release.  A clean
-        copy (host still valid) is dropped without moving bytes."""
+        copy (host still valid) is dropped without moving bytes.
+
+        Dirty victims consult the spill-tier stack (``memory.select_tier``):
+        a peer-device spill becomes a device-to-device transfer (the EVICT
+        runs on the D2D link, ``src_device`` set like any D2D element), a
+        host-tier spill stays on the D2H engine but the tier stores/encodes
+        the payload instead of the plain host write-back.  A stack-wide
+        miss — or no stack at all — is the flat PR 5 D2H spill."""
         sched = self.sched
         dirty = not getattr(ma, "host_valid", True)
+        tier = plan = None
+        if dirty:
+            tier, plan = sched.memory.select_tier(ma)
+        if tier is None:
+            t = ComputationalElement(
+                fn=None, args=(inout(ma),), kind=ElementKind.EVICT,
+                name=f"evict_{ma.name}",
+                transfer_bytes=ma.nbytes if dirty else 0,
+                config={"writeback": dirty}, priority=priority, tenant=tenant)
+            t.device = ma.device_id if ma.device_id is not None else 0
+            if sched.policy == "parallel":
+                self.schedule(t)
+            else:
+                self.serial(t)
+            sched.memory.note_evict(ma)
+            return t
+        src = ma.device_id if ma.device_id is not None else 0
+        target = plan.get("target")
+        wire = int(plan.get("transfer_bytes", ma.nbytes))
         t = ComputationalElement(
             fn=None, args=(inout(ma),), kind=ElementKind.EVICT,
-            name=f"evict_{ma.name}", transfer_bytes=ma.nbytes if dirty else 0,
-            config={"writeback": dirty}, priority=priority, tenant=tenant)
-        t.device = ma.device_id if ma.device_id is not None else 0
+            name=f"evict_{ma.name}", transfer_bytes=wire,
+            config=dict({"writeback": True}, **plan.get("config", {})),
+            priority=priority, tenant=tenant)
+        t.tier = tier
+        if tier.location == "device":
+            t.device = target       # runs on the (src -> target) D2D link
+            t.src_device = src
+            sched.d2d_transfers += 1
+        else:
+            t.device = src          # runs on the source's D2H engine
         if sched.policy == "parallel":
             self.schedule(t)
         else:
             self.serial(t)
-        sched.memory.note_evict(ma)
+        sched.memory.note_spill(ma, tier, target, wire)
         return t
+
+    def reload(self, args: Sequence[Arg], device: int, *,
+               priority: int = 0, tenant: str = DEFAULT_TENANT) -> None:
+        """Insert RELOAD elements for read args parked in a host-side tier
+        (``ma.backing_tier`` set).  The tier handler restores the host
+        payload and the H2D engine uploads it; the DAG orders the RELOAD
+        after the spill's write via the ordinary ``inout`` rules.  Peer-tier
+        blocks never reach here — they are device-resident and come back
+        through the migrate stage's plain D2D."""
+        sched = self.sched
+        for a in args:
+            ma = a.array
+            tname = getattr(ma, "backing_tier", None)
+            if tname is None or not a.mode.reads:
+                continue
+            tier = sched.memory.tier_named(tname)
+            if tier is None:        # stack reconfigured under a live block
+                continue
+            cfg = {"tier": tier.name}
+            gbps = getattr(tier, "gbps", None)
+            if gbps is not None:
+                cfg["tier_gbps"] = gbps
+            t = ComputationalElement(
+                fn=None, args=(inout(ma),), kind=ElementKind.RELOAD,
+                name=f"reload_{ma.name}",
+                transfer_bytes=tier.reload_wire_bytes(ma),
+                config=cfg, priority=priority, tenant=tenant)
+            t.tier = tier
+            t.device = device
+            if sched.policy == "parallel":
+                self.schedule(t)
+            else:
+                self.serial(t)
+            sched.memory.note_reload(ma, device)
 
     def prefetch(self, args: Sequence[Arg], device: int = 0, *,
                  priority: int = 0, tenant: str = DEFAULT_TENANT) -> None:

@@ -46,6 +46,21 @@ def assert_conservation(sched, arrays):
         assert got == expect, f"device {d}: tracked {got} != actual {expect}"
 
 
+def assert_stack_conservation(sched, arrays):
+    """Whole-stack conservation (ISSUE 6): device pools *plus* host-side
+    tier residency together account for exactly the managed bytes whose
+    only valid copy the runtime is holding — device-valid arrays (peer
+    spills included: they stay device-resident) and tier-backed arrays."""
+    assert_conservation(sched, arrays)
+    expect = sum(a.nbytes for a in arrays
+                 if a.device_valid or getattr(a, "backing_tier", None))
+    got = (sum(p.resident_bytes for p in sched.memory.pools)
+           + sum(t.resident_bytes for t in sched.memory.tiers
+                 if t.location == "host"))
+    assert got == expect, f"stack: tracked {got} != actual {expect}"
+    assert sched.memory.verify() == []
+
+
 # ======================================================================
 # MemoryPool unit behaviour
 # ======================================================================
@@ -481,3 +496,76 @@ def test_memory_conservation_property(seed):
         assert_conservation(s, arrays)
     s.sync()
     assert_conservation(s, arrays)
+
+
+# ======================================================================
+# ISSUE 6: the spill-tier stack — whole-stack conservation + replay gating
+# ======================================================================
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=2 ** 32 - 1))
+def test_whole_stack_conservation_property(seed):
+    """Same randomized workload, but under a full tier stack (peer-device
+    then compressed-host): at every step, device pools + host-tier
+    residency exactly cover device-valid and tier-backed bytes, and the
+    ``verify()`` cross-check of bits vs ledgers stays clean."""
+    from repro.core import CompressedHostTier, PeerDeviceTier
+    rng = np.random.RandomState(seed)
+    s = make_scheduler("parallel", simulate=True, num_devices=2,
+                       placement="min-pressure",
+                       memory_budget={0: 4 * CHUNK, 1: 3 * CHUNK},
+                       spill_tiers=[PeerDeviceTier(),
+                                    CompressedHostTier(lossy=False)])
+    stage = _stage(s)
+    arrays = [s.array(rng.rand(N).astype(np.float32), name=f"ws_{i}")
+              for i in range(3)]
+    for step in range(20):
+        op = rng.randint(4)
+        if op == 0 and len(arrays) < 10:
+            arrays.append(s.array(rng.rand(N).astype(np.float32),
+                                  name=f"ws_n{step}"))
+        elif op == 1:
+            arrays.append(stage(arrays[rng.randint(len(arrays))]))
+        elif op == 2:
+            arrays[rng.randint(len(arrays))].read()
+        else:
+            arrays[rng.randint(len(arrays))].write(
+                rng.rand(N).astype(np.float32))
+        assert_stack_conservation(s, arrays)
+    s.sync()
+    assert_stack_conservation(s, arrays)
+
+
+def test_replay_budget_gate_with_tier_stack():
+    """The shrunk-budget regression under a tier stack: a plan recorded
+    with tier spills must stop replaying when the budget shrinks below
+    its recorded peak, re-record a plan for the new budget, and keep the
+    whole-stack accounting exact throughout."""
+    from repro.core import CompressedHostTier
+    s = make_scheduler("parallel", simulate=True, memory_budget=16 * CHUNK,
+                       spill_tiers=[CompressedHostTier(lossy=False)])
+    alive = []
+
+    def episode():
+        with s.capture("tshrink_ep"):
+            xs = [s.array(np.zeros(N, np.float32)) for _ in range(2)]
+            outs = [_stage(s)(x) for x in xs]
+        s.sync()
+        alive.extend(xs + outs)
+        assert_stack_conservation(s, alive)
+        return outs
+
+    episode()
+    episode()
+    assert s.stats()["plan_replays"] == 1
+    (plan,) = s.plan_cache.candidates("tshrink_ep")
+    s.memory.pools[0].budget_bytes = plan.device_mem[0][1] - 1
+    episode()
+    st = s.stats()
+    assert st["plan_replays"] == 1           # unfitting plan not replayed
+    assert st["plan_records"] == 2           # tier-spill-aware re-record
+    with pytest.raises(DeviceOutOfMemoryError):
+        s.replay(plan)
+    episode()                                # the new plan replays fine
+    assert s.stats()["plan_replays"] == 2
+    assert_stack_conservation(s, alive)
