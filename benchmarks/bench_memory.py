@@ -48,6 +48,7 @@ def run_outofcore(budget, *, simulate: bool, chunks: int, n: int) -> dict:
         ok = True if simulate else verify_outofcore(arrays)
         s.sync()
         return {"makespan_s": s.timeline.makespan, "correct": bool(ok),
+                "reload_stall_s": s.timeline.reload_stall_s(),
                 **_mem_stats(s)}
     finally:
         s.shutdown()
@@ -65,8 +66,9 @@ def run_tiered(tiers, *, chunks: int, n: int, cost_s: float = 1e-5) -> dict:
         build_outofcore(s, chunks=chunks, n=n, cost_s=cost_s, device=0)
         s.sync()
         tier_stats = s.stats().get("mem_tiers", {})
-        return {"makespan_s": s.timeline.makespan, **_mem_stats(s),
-                "tiers": tier_stats}
+        return {"makespan_s": s.timeline.makespan,
+                "reload_stall_s": s.timeline.reload_stall_s(),
+                **_mem_stats(s), "tiers": tier_stats}
     finally:
         s.shutdown()
 
@@ -102,9 +104,13 @@ def main(smoke: bool = False) -> list:
     rows.append(("outofcore/sim/budgeted", budgeted["makespan_s"] * 1e6,
                  f"spills={budgeted['mem_spills']} "
                  f"spill_mb={budgeted['mem_spill_bytes'] / 2 ** 20:.2f} "
+                 f"reload_mb={budgeted['mem_reload_bytes'] / 2 ** 20:.2f} "
+                 f"reload_stall_us={budgeted['reload_stall_s'] * 1e6:.1f} "
                  f"makespan_ratio={ratio:.3f}"))
     rows.append(("outofcore/real/budgeted", real["makespan_s"] * 1e6,
-                 f"spills={real['mem_spills']} correct={real['correct']}"))
+                 f"spills={real['mem_spills']} "
+                 f"reload_mb={real['mem_reload_bytes'] / 2 ** 20:.2f} "
+                 f"correct={real['correct']}"))
 
     # Tiered-spill comparison: transfer-bound chunks (a 4 MiB chunk costs
     # ~350 us over PCIe vs ~84 us over the D2D link) so spill *placement*

@@ -1,0 +1,153 @@
+"""Plan-time optimizer benchmarks (planopt.py) -> BENCH_planopt.json.
+
+Two gate scenarios, each run greedy (``plan_optimize=False``) vs optimized
+under capture/replay on the simulator:
+
+* **locality-heavy / 2 devices / round-robin** — the worst case for
+  location-blind placement: every scattered hop drags a persistent array
+  across the D2D link.  The min-cut refinement must coalesce each group's
+  chain onto one device (>= 20% D2D-byte reduction; in practice ~100%)
+  without hurting makespan.
+* **out-of-core / 1 device / budget = working set / 2** — the reactive-LRU
+  thrash case: LRU spills the intermediates pass 2 is about to read and
+  reloads them on demand.  The Belady rewrite must spill no more bytes
+  than LRU and strictly reduce the re-upload (reload) traffic.
+
+The run **fails fast** when the optimized plan loses any gate — slower
+makespan, insufficient D2D reduction, more spill/reload bytes, or plans
+that never actually replayed (a vacuous comparison).
+"""
+from __future__ import annotations
+
+import json
+
+from repro.benchsuite.multidevice import build_locality_heavy
+from repro.benchsuite.outofcore import build_outofcore, working_set_bytes
+from repro.core import make_scheduler
+from repro.core.element import ElementKind
+
+from .common import emit
+
+EPISODES = 3            # 1 record + 2 replays
+D2D_REDUCTION = 0.20    # locality-heavy gate: >= 20% fewer D2D bytes
+
+
+def _plan_bytes(sched, name: str, kind: ElementKind) -> int:
+    return sum(pe.transfer_bytes
+               for plan in sched.plan_cache.candidates(name)
+               for pe in plan.elements if pe.kind is kind)
+
+
+def run_locality(optimize: bool, *, groups: int, iters: int, n: int) -> dict:
+    s = make_scheduler("parallel", simulate=True, num_devices=2,
+                       placement="round-robin", plan_optimize=optimize)
+    try:
+        for _ in range(EPISODES):
+            with s.capture("planopt_loc"):
+                build_locality_heavy(s, groups=groups, iters=iters, n=n)
+            s.sync()
+        st = s.stats()
+        plans = s.plan_cache.candidates("planopt_loc")
+        return {"makespan_s": s.timeline.makespan,
+                "plan_d2d_bytes": _plan_bytes(s, "planopt_loc",
+                                              ElementKind.D2D),
+                "d2d_transfers": st["d2d_transfers"],
+                "plan_replays": st["plan_replays"],
+                "optimized": any(p.optimized for p in plans)}
+    finally:
+        s.shutdown()
+
+
+def run_outofcore_opt(optimize: bool, *, chunks: int, n: int) -> dict:
+    budget = working_set_bytes(chunks, n) // 2
+    s = make_scheduler("parallel", simulate=True,
+                       memory_budget=budget, plan_optimize=optimize)
+    try:
+        for _ in range(EPISODES):
+            with s.capture("planopt_ooc"):
+                build_outofcore(s, chunks=chunks, n=n)
+            s.sync()
+        st = s.stats()
+        plans = s.plan_cache.candidates("planopt_ooc")
+        return {"makespan_s": s.timeline.makespan,
+                "spill_bytes": st["mem_spill_bytes"],
+                "reload_bytes": st["mem_reload_bytes"],
+                "evicts_scheduled": st["mem_evicts_scheduled"],
+                "reload_stall_s": s.timeline.reload_stall_s(),
+                "plan_replays": st["plan_replays"],
+                "optimized": any(p.optimized for p in plans),
+                "mem_scheduled": any(p.mem_scheduled for p in plans)}
+    finally:
+        s.shutdown()
+
+
+def main(smoke: bool = False) -> list:
+    groups, iters, n = (2, 3, 1 << 12) if smoke else (4, 6, 1 << 20)
+    loc_greedy = run_locality(False, groups=groups, iters=iters, n=n)
+    loc_opt = run_locality(True, groups=groups, iters=iters, n=n)
+
+    o_chunks, o_n = (6, 1 << 10) if smoke else (8, 1 << 16)
+    ooc_greedy = run_outofcore_opt(False, chunks=o_chunks, n=o_n)
+    ooc_opt = run_outofcore_opt(True, chunks=o_chunks, n=o_n)
+
+    d2d_cut = 1.0 - (loc_opt["plan_d2d_bytes"]
+                     / max(loc_greedy["plan_d2d_bytes"], 1))
+    rows = [
+        ("planopt/locality/greedy", loc_greedy["makespan_s"] * 1e6,
+         f"plan_d2d_mb={loc_greedy['plan_d2d_bytes'] / 2 ** 20:.2f}"),
+        ("planopt/locality/optimized", loc_opt["makespan_s"] * 1e6,
+         f"plan_d2d_mb={loc_opt['plan_d2d_bytes'] / 2 ** 20:.2f} "
+         f"d2d_reduction={d2d_cut:.0%}"),
+        ("planopt/outofcore/greedy-lru", ooc_greedy["makespan_s"] * 1e6,
+         f"spill_mb={ooc_greedy['spill_bytes'] / 2 ** 20:.2f} "
+         f"reload_mb={ooc_greedy['reload_bytes'] / 2 ** 20:.2f}"),
+        ("planopt/outofcore/belady", ooc_opt["makespan_s"] * 1e6,
+         f"spill_mb={ooc_opt['spill_bytes'] / 2 ** 20:.2f} "
+         f"reload_mb={ooc_opt['reload_bytes'] / 2 ** 20:.2f} "
+         f"evicts_scheduled={ooc_opt['evicts_scheduled']}"),
+    ]
+    result = {"locality": {"greedy": loc_greedy, "optimized": loc_opt,
+                           "d2d_reduction": d2d_cut},
+              "outofcore": {"greedy_lru": ooc_greedy, "belady": ooc_opt}}
+    if not smoke:
+        with open("BENCH_planopt.json", "w") as f:
+            json.dump(result, f, indent=2, sort_keys=True)
+    emit(rows)
+
+    # Fail-fast gates (the ISSUE's acceptance criteria).
+    eps = 1e-9
+    for tag, g, o in (("locality", loc_greedy, loc_opt),
+                      ("outofcore", ooc_greedy, ooc_opt)):
+        if o["plan_replays"] < EPISODES - 1 or g["plan_replays"] < EPISODES - 1:
+            raise SystemExit(f"bench_planopt: {tag} plans did not replay "
+                             f"— the comparison is vacuous")
+        if not o["optimized"]:
+            raise SystemExit(f"bench_planopt: {tag} optimizer never fired")
+        if o["makespan_s"] > g["makespan_s"] * (1 + eps):
+            raise SystemExit(
+                f"bench_planopt: optimized {tag} makespan "
+                f"({o['makespan_s'] * 1e3:.3f} ms) exceeds greedy "
+                f"({g['makespan_s'] * 1e3:.3f} ms)")
+    if loc_opt["plan_d2d_bytes"] > loc_greedy["plan_d2d_bytes"] \
+            * (1 - D2D_REDUCTION):
+        raise SystemExit(
+            f"bench_planopt: locality-heavy D2D reduction {d2d_cut:.0%} "
+            f"is below the {D2D_REDUCTION:.0%} gate")
+    if ooc_opt["spill_bytes"] > ooc_greedy["spill_bytes"]:
+        raise SystemExit(
+            f"bench_planopt: Belady spill bytes ({ooc_opt['spill_bytes']}) "
+            f"exceed LRU ({ooc_greedy['spill_bytes']})")
+    if ooc_opt["spill_bytes"] + ooc_opt["reload_bytes"] \
+            >= ooc_greedy["spill_bytes"] + ooc_greedy["reload_bytes"]:
+        raise SystemExit(
+            "bench_planopt: Belady spill+reload traffic is not strictly "
+            "below LRU — the memory schedule is not paying for itself")
+    if not ooc_opt["mem_scheduled"]:
+        raise SystemExit("bench_planopt: the out-of-core plan carries no "
+                         "Belady schedule (mem_scheduled=False)")
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    main(smoke="--smoke" in sys.argv)

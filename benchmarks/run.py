@@ -13,7 +13,7 @@ def main() -> None:
     from . import (bench_api_overhead, bench_capture, bench_contention,
                    bench_hwmetrics, bench_memory, bench_multidevice,
                    bench_multitenant, bench_oracle, bench_overlap,
-                   bench_roofline, bench_speedup)
+                   bench_planopt, bench_roofline, bench_speedup)
 
     suites = [
         ("API overhead: legacy vs GrFunction vs replay "
@@ -27,6 +27,8 @@ def main() -> None:
         ("Fig.12 hw-metrics", bench_hwmetrics),
         ("Table.I memory + out-of-core spill (BENCH_memory.json)",
          bench_memory),
+        ("Plan-time optimizer: min-cut placement + Belady memory "
+         "(BENCH_planopt.json)", bench_planopt),
         ("Roofline (dry-run)", bench_roofline),
         ("Multi-device scaling", bench_multidevice),
         ("Multi-tenant QoS (BENCH_multitenant.json)", bench_multitenant),

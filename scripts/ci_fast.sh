@@ -25,4 +25,8 @@ python -m pytest -q tests/test_multitenant.py
 # fails fast when it records zero spills (spill path not exercised) or the
 # budgeted makespan exceeds 2x the unlimited run.
 python -m benchmarks.bench_memory --smoke
+# Plan-time optimizer smoke: locality-heavy and out-of-core captures run
+# greedy vs optimized; fails fast when the optimized makespan or the
+# spill/D2D traffic exceeds greedy, or the optimizer never fired.
+python -m benchmarks.bench_planopt --smoke
 exec python -m pytest -q -m "not slow" "$@"

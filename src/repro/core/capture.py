@@ -72,6 +72,34 @@ def freeze_config(config: dict) -> Tuple[Tuple[str, Any], ...]:
     return tuple(sorted((k, _freeze(v)) for k, v in config.items()))
 
 
+class _PlanSignature:
+    """Structural cache key with a memoized hash.
+
+    The signature tuple nests every element/slot of the plan; tuples do not
+    cache their hash, so keying the cache on the raw tuple re-walked the
+    whole plan on *every* probe (each transparent episode probes at least
+    once).  Hashing once at plan finalization makes the probe O(1); equality
+    short-circuits on the stored hash before falling back to the tuple
+    compare dict collisions require."""
+
+    __slots__ = ("data", "_hash")
+
+    def __init__(self, data: Tuple) -> None:
+        self.data = data
+        self._hash = hash(data)
+
+    def __hash__(self) -> int:
+        return self._hash
+
+    def __eq__(self, other: Any) -> bool:
+        if isinstance(other, _PlanSignature):
+            return self._hash == other._hash and self.data == other.data
+        return self.data == other
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"<_PlanSignature {self._hash:#x}>"
+
+
 # ======================================================================
 # Immutable plan structures
 # ======================================================================
@@ -154,6 +182,10 @@ class PlanElement:
     # alias each other's plans, while one declaration whose Python closure
     # is re-created per episode keeps replaying the same plan.
     fn_key: Optional[int] = None
+    # The caller pinned this element's device explicitly; the plan-time
+    # optimizer (planopt.py) must keep it in place — replay matching
+    # rejects a device retarget of a pinned launch.
+    pinned: bool = False
 
 
 @dataclass(frozen=True)
@@ -183,14 +215,39 @@ class ExecutionPlan:
     # current budgets — a shrunk budget re-records a spill-aware plan
     # instead of silently blowing the device's memory.
     device_mem: Tuple[Tuple[int, int], ...] = ()
+    # Set by the plan-time optimizer (planopt.py): ``optimized`` marks a
+    # rewritten plan; ``mem_scheduled`` means the plan carries its own
+    # Belady evict/reload schedule, so replay honors it instead of the
+    # reactive per-element LRU reserve.  Neither is part of the structural
+    # signature — an optimized plan *replaces* its greedy original in the
+    # cache rather than coexisting with it.
+    optimized: bool = False
+    mem_scheduled: bool = False
 
     @property
-    def signature(self) -> Tuple:
-        return (self.elements, self.slots, self.device_mem)
+    def signature(self) -> "_PlanSignature":
+        # Memoized: hashed once at first use (finalization stores the plan,
+        # which probes the cache), O(1) on every later probe.  The plan is
+        # immutable, so the cached value can never go stale; optimize/retag
+        # build a *new* plan object with its own signature.
+        sig = self.__dict__.get("_signature")
+        if sig is None:
+            sig = _PlanSignature((self.elements, self.slots, self.device_mem))
+            object.__setattr__(self, "_signature", sig)
+        return sig
 
     @property
     def num_kernels(self) -> int:
         return len(self.kernel_positions)
+
+    def optimize(self, sched) -> "ExecutionPlan":
+        """Run the plan-time global optimizer on this plan (see
+        :func:`repro.core.planopt.optimize_plan`); returns the rewritten
+        plan, or ``self`` when no strict improvement is possible.  Does not
+        touch the scheduler's plan cache — use
+        :meth:`GrScheduler.optimize_plan` for cached plans."""
+        from .planopt import optimize_plan
+        return optimize_plan(sched, self)
 
     def __len__(self) -> int:
         return len(self.elements)
@@ -282,6 +339,7 @@ class _Draft:
     priority: int = 0
     tenant: str = DEFAULT_TENANT
     fn_key: Optional[int] = None
+    pinned: bool = False
 
 
 def _assign_plan_lanes(drafts: Sequence[_Draft]):
@@ -426,7 +484,8 @@ class _Recorder:
             device=e.device if e.device is not None else 0,
             src_device=e.src_device, parents=parents, fn=e.fn,
             raw_config=dict(e.config),
-            priority=e.priority, tenant=e.tenant, fn_key=e.fn_key))
+            priority=e.priority, tenant=e.tenant, fn_key=e.fn_key,
+            pinned=bool(getattr(e, "device_pinned", False))))
 
     def build(self, name: str) -> Optional[ExecutionPlan]:
         if not any(d.kind is ElementKind.KERNEL for d in self.drafts):
@@ -437,7 +496,8 @@ class _Recorder:
             cost_s=d.cost_s, transfer_bytes=d.transfer_bytes,
             arg_slots=d.arg_slots, lane=lane, device=d.device,
             src_device=d.src_device, parents=d.parents, wait_events=events,
-            priority=d.priority, tenant=d.tenant, fn_key=d.fn_key)
+            priority=d.priority, tenant=d.tenant, fn_key=d.fn_key,
+            pinned=d.pinned)
             for d, (lane, events) in zip(self.drafts, placed))
         return ExecutionPlan(
             name=name, key=f"{name}#{next(_PLAN_IDS)}",
@@ -539,13 +599,16 @@ def _apply_location_bits(sched, pe: PlanElement, bound: List[Any]) -> None:
     elif pe.kind is ElementKind.D2D:
         mem.note_d2d(bound[pe.arg_slots[0][0]], pe.device)
     elif pe.kind is ElementKind.EVICT:
+        # Plan-carried evictions are *scheduled* (part of the captured —
+        # possibly Belady-rewritten — memory schedule), not reactive.
         cfg = dict(pe.config)
         tier = mem.tier_named(cfg["tier"]) if cfg.get("tier") else None
         if tier is not None:
             mem.note_spill(bound[pe.arg_slots[0][0]], tier,
-                           cfg.get("spill_target"), pe.transfer_bytes)
+                           cfg.get("spill_target"), pe.transfer_bytes,
+                           scheduled=True)
         else:
-            mem.note_evict(bound[pe.arg_slots[0][0]])
+            mem.note_evict(bound[pe.arg_slots[0][0]], scheduled=True)
     elif pe.kind is ElementKind.RELOAD:
         mem.note_reload(bound[pe.arg_slots[0][0]], pe.device)
     else:
@@ -567,13 +630,20 @@ def _flush_range(sched, r: _ReplayState, hi_inclusive: int,
     replays chain correctly behind earlier eager/replayed work touching the
     same arrays."""
     plan = r.plan
+    bounded = sched.memory.bounded
     if not r.started:
         # The whole episode costs one reduced plan-launch overhead
         # (cudaGraphLaunch analogue) instead of one overhead per element.
         sched.executor.host_overhead(sched.plan_launch_overhead_s)
         r.started = True
+        if bounded and plan.mem_scheduled:
+            # The plan carries its own Belady evict/reload schedule: make
+            # room for its recorded per-device peak once, up front (stale
+            # foreign leftovers are the only possible victims), then let
+            # the plan's own EVICT elements manage its working set.
+            sched.pipeline.reserve_plan(
+                plan, extra_pinned=r.pinned.union(r.bound_keys))
     is_done = sched.executor.is_done
-    bounded = sched.memory.bounded
     items = []
     for idx in range(r.flushed, hi_inclusive + 1):
         pe = plan.elements[idx]
@@ -589,6 +659,7 @@ def _flush_range(sched, r: _ReplayState, hi_inclusive: int,
             priority=pe.priority, tenant=pe.tenant, fn_key=pe.fn_key)
         ce.device = pe.device
         ce.src_device = pe.src_device
+        ce.device_pinned = pe.pinned    # survives a seed_from_replay re-trace
         if pe.kind in (ElementKind.EVICT, ElementKind.RELOAD):
             # Re-resolve the tier by name against the *current* stack: the
             # plan records only the tier name (part of the frozen config),
@@ -596,13 +667,16 @@ def _flush_range(sched, r: _ReplayState, hi_inclusive: int,
             tname = plan.configs[idx].get("tier")
             if tname:
                 ce.tier = sched.memory.tier_named(tname)
-        if bounded and pe.kind is not ElementKind.EVICT:
+        if bounded and not plan.mem_scheduled \
+                and pe.kind is not ElementKind.EVICT:
             # Replays reserve dynamically too: plan gating guarantees the
             # plan's *own* peak fits the budget, but stale foreign arrays
             # (earlier episodes' leftovers) may still hold bytes — evict
             # those eagerly, never an array the plan has bound (or will
             # bind by default).  The synthesized evicts bypass the replay
-            # lanes entirely.
+            # lanes entirely.  (Belady-scheduled plans did this once, up
+            # front, in reserve_plan — their element order *is* the
+            # schedule, so the reactive reserve must not interleave.)
             sched.pipeline.reserve(
                 ce, extra_pinned=r.pinned.union(r.bound_keys))
         parents = [r.new_elements[p] for p in pe.parents]
@@ -784,6 +858,15 @@ class CaptureContext:
         if self.mode == "record" and self.recorder is not None:
             plan = self.recorder.build(self.name)
             if plan is not None:
+                if getattr(self.sched, "plan_optimize", False):
+                    # Plan-time global optimization (planopt.py): min-cut
+                    # placement + Belady memory scheduling.  Returns the
+                    # same object when no strict improvement exists, so
+                    # disabled/unimprovable plans cache the greedy trace
+                    # bit for bit.
+                    from .planopt import optimize_plan
+                    with self.sched.pipeline:
+                        plan = optimize_plan(self.sched, plan)
                 for displaced in self.sched.plan_cache.store(plan):
                     self.sched.streams.unreserve(displaced.key)
         return False

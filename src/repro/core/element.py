@@ -140,6 +140,11 @@ class ComputationalElement:
     uid: int = field(default_factory=lambda: next(_ELEMENT_IDS))
     stream: Optional[int] = None       # lane id assigned by the StreamManager
     device: Optional[int] = None       # device chosen by the placement policy
+    # True when ``device`` was pinned by the caller (GrFunction
+    # ``with_options(device=...)``) rather than chosen by the placement
+    # policy.  Capture records it so the plan optimizer never moves a
+    # user-pinned kernel (replay matching rejects device retargets).
+    device_pinned: bool = False
     src_device: Optional[int] = None   # D2D only: device the copy reads from
     parents: list = field(default_factory=list)    # list[ComputationalElement]
     children: list = field(default_factory=list)

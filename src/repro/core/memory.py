@@ -58,7 +58,11 @@ class MemoryPool:
     * ``spills``         — dirty evictions (device copy newer than host →
       an async D2H write-back was scheduled);
     * ``spill_bytes``    — bytes moved by those write-backs;
-    * ``evict_blocks``   — arrays evicted in total (dirty + clean drops).
+    * ``evict_blocks``   — arrays evicted in total (dirty + clean drops);
+    * ``reloads``/``reload_bytes`` — re-uploads of previously evicted
+      blocks (the *return* traffic spilling causes; reported separately
+      from ``spill_bytes`` so eviction-policy quality is visible: a policy
+      that spills dead blocks moves the same spill bytes but reloads none).
     """
 
     def __init__(self, device_id: int,
@@ -70,6 +74,8 @@ class MemoryPool:
         self.spills = 0
         self.spill_bytes = 0
         self.evict_blocks = 0
+        self.reloads = 0
+        self.reload_bytes = 0
         # key -> nbytes, insertion order == LRU order (oldest first); touch
         # moves a key to the MRU end.
         self._resident: "OrderedDict[int, int]" = OrderedDict()
@@ -117,7 +123,9 @@ class MemoryPool:
                 "occupancy": self.occupancy,
                 "spills": self.spills,
                 "spill_bytes": self.spill_bytes,
-                "evict_blocks": self.evict_blocks}
+                "evict_blocks": self.evict_blocks,
+                "reloads": self.reloads,
+                "reload_bytes": self.reload_bytes}
 
 
 def _nbytes(array: Any) -> int:
@@ -162,6 +170,17 @@ class MemoryManager:
         # The weakref finalizer drops physical tier payloads (compressed
         # bytes, spool files) when an array is GC'd while spilled.
         self._tier_of: Dict[int, Tuple[BackingTier, Any]] = {}
+        # Keys evicted off-device at some point and not yet re-uploaded:
+        # the next h2d/d2d/reload of such a key is *return traffic caused
+        # by eviction*, counted under the pool's reload stats.  Cleared on
+        # host overwrite (the re-upload then carries new data, not a
+        # reload) and on GC.
+        self._evicted_keys: set = set()
+        # Scheduled (plan-carried Belady EVICT elements replayed from a
+        # captured plan) vs reactive (LRU reserve under live pressure)
+        # eviction split, for the planopt benchmarks.
+        self.evicts_scheduled = 0
+        self.evicts_reactive = 0
 
     # ------------------------------------------------------------------
     @property
@@ -178,6 +197,7 @@ class MemoryManager:
             if entry is not None:
                 self.pools[entry[0]].discard(key)
             self._tier_release(key)
+            self._evicted_keys.discard(key)
 
     # -- tier stack ----------------------------------------------------
     def tier_named(self, name: str) -> Optional[BackingTier]:
@@ -251,10 +271,21 @@ class MemoryManager:
     # eager pipeline, capture replay, host-write path — may not flip the
     # bits themselves.
     # ------------------------------------------------------------------
+    def _note_return(self, key: int, device: int, nbytes: int) -> None:
+        """Count a re-upload of a previously evicted key as reload traffic.
+        Must hold the manager lock."""
+        if key in self._evicted_keys:
+            self._evicted_keys.discard(key)
+            pool = self.pool(device)
+            pool.reloads += 1
+            pool.reload_bytes += nbytes
+
     def note_h2d(self, ma: Any, device: int) -> None:
         """An H2D prefetch of ``ma`` onto ``device`` was scheduled."""
         ma.device_valid = True
         ma.device_id = device
+        with self._lock:
+            self._note_return(dep_key(ma), device, _nbytes(ma))
         self._make_resident(ma, device)
 
     def note_d2d(self, ma: Any, device: int) -> None:
@@ -264,6 +295,7 @@ class MemoryManager:
         ma.device_id = device
         with self._lock:
             self._tier_release(dep_key(ma), reload=True)
+            self._note_return(dep_key(ma), device, _nbytes(ma))
         self._make_resident(ma, device)
 
     def note_device_write(self, ma: Any, device: int) -> None:
@@ -276,12 +308,17 @@ class MemoryManager:
             ma.backing_tier = None
         with self._lock:
             self._tier_release(dep_key(ma))
+            # A write-only kernel re-materializes an evicted block with new
+            # data; no bytes came back over the link, so not a reload.
+            self._evicted_keys.discard(dep_key(ma))
         self._make_resident(ma, device)
 
-    def note_evict(self, ma: Any) -> bool:
+    def note_evict(self, ma: Any, scheduled: bool = False) -> bool:
         """An EVICT of ``ma`` was scheduled: the device copy is dropped
         (after an async D2H write-back when it was the only valid copy).
-        Returns True when the eviction was dirty (write-back needed)."""
+        Returns True when the eviction was dirty (write-back needed).
+        ``scheduled=True`` marks a plan-carried (Belady) eviction rather
+        than a reactive LRU one — the split is reported in stats()."""
         dirty = not getattr(ma, "host_valid", True)
         device = getattr(ma, "device_id", None)
         pool = self.pool(device if device is not None else 0)
@@ -291,7 +328,12 @@ class MemoryManager:
         self._drop_residency(ma)
         with self._lock:
             self._tier_release(dep_key(ma))
+            self._evicted_keys.add(dep_key(ma))
             pool.evict_blocks += 1
+            if scheduled:
+                self.evicts_scheduled += 1
+            else:
+                self.evicts_reactive += 1
             if dirty:
                 pool.spills += 1
                 pool.spill_bytes += _nbytes(ma)
@@ -299,7 +341,8 @@ class MemoryManager:
 
     def note_spill(self, ma: Any, tier: BackingTier,
                    target: Optional[int] = None,
-                   wire_bytes: Optional[int] = None) -> None:
+                   wire_bytes: Optional[int] = None,
+                   scheduled: bool = False) -> None:
         """A tiered spill of dirty ``ma`` was scheduled.
 
         Peer tier (``location == "device"``): the block becomes an ordinary
@@ -316,7 +359,12 @@ class MemoryManager:
         pool = self.pool(src if src is not None else 0)
         with self._lock:
             self._tier_release(key)     # re-spill replaces any old entry
+            self._evicted_keys.add(key)
             pool.evict_blocks += 1
+            if scheduled:
+                self.evicts_scheduled += 1
+            else:
+                self.evicts_reactive += 1
             pool.spills += 1
             pool.spill_bytes += nb
             tier.note_spill(key, nb, nb if wire_bytes is None else wire_bytes)
@@ -343,6 +391,7 @@ class MemoryManager:
         engine uploads it, so both copies become valid."""
         with self._lock:
             self._tier_release(dep_key(ma), reload=True)
+            self._note_return(dep_key(ma), device, _nbytes(ma))
         ma.backing_tier = None
         ma.host_valid = True
         ma.device_valid = True
@@ -371,6 +420,8 @@ class MemoryManager:
             ma.backing_tier = None
         with self._lock:
             self._tier_release(dep_key(ma))
+            # The next upload carries *new* host data — not reload traffic.
+            self._evicted_keys.discard(dep_key(ma))
         self._drop_residency(ma)
 
     # ------------------------------------------------------------------
@@ -489,10 +540,57 @@ class MemoryManager:
                         victims.append(ma)
             return victims
 
+    def reserve_bytes(self, device: int, peak: int,
+                      is_frontier: Optional[Callable[[int], bool]] = None,
+                      extra_pinned: Optional[Iterable[int]] = None
+                      ) -> List[Any]:
+        """Make room for ``peak`` bytes on ``device`` up front (the whole-
+        plan analogue of :meth:`reserve`): evict LRU victims — non-frontier
+        first — until the *non-pinned* resident bytes fit beside ``peak``.
+
+        Used by ``SubmissionPipeline.reserve_plan`` before replaying a
+        Belady-scheduled plan: the plan's own slots are in ``extra_pinned``
+        (their bytes are part of ``peak`` already), so only foreign
+        leftovers from earlier episodes are evicted.  Returns the victim
+        arrays; never raises — ``plan_fits`` gating already checked
+        ``peak <= budget``."""
+        pool = self.pool(device)
+        if pool.budget_bytes is None:
+            return []
+        no_evict = set(extra_pinned) if extra_pinned is not None else set()
+        with self._lock:
+            pinned_res = sum(nb for k, nb in pool._resident.items()
+                             if k in no_evict)
+            need = (pool.resident_bytes - pinned_res) \
+                - (pool.budget_bytes - peak)
+            if need <= 0:
+                return []
+            victims: List[Any] = []
+            for frontier_pass in (False, True):
+                if need <= 0:
+                    break
+                for k in pool.lru_keys():
+                    if need <= 0:
+                        break
+                    if k in no_evict:
+                        continue
+                    if (not frontier_pass and is_frontier is not None
+                            and is_frontier(k)):
+                        continue
+                    entry = self._where.get(k)
+                    ma = entry[1]() if entry is not None else None
+                    freed = pool.discard(k)
+                    self._where.pop(k, None)
+                    need -= freed
+                    if ma is not None:
+                        victims.append(ma)
+            return victims
+
     # ------------------------------------------------------------------
     def stats(self) -> dict:
         agg = {"resident_bytes": 0, "peak_bytes": 0, "spills": 0,
-               "spill_bytes": 0, "evict_blocks": 0}
+               "spill_bytes": 0, "evict_blocks": 0, "reloads": 0,
+               "reload_bytes": 0}
         per = {}
         bounded_res = bounded_budget = 0
         for p in self.pools:
@@ -504,6 +602,8 @@ class MemoryManager:
                 bounded_res += p.resident_bytes
                 bounded_budget += p.budget_bytes
         out = {f"mem_{k}": v for k, v in agg.items()}
+        out["mem_evicts_scheduled"] = self.evicts_scheduled
+        out["mem_evicts_reactive"] = self.evicts_reactive
         # Pressure alarm input: resident/budget over the *bounded* pools
         # (0.0 when every pool is unlimited, like MemoryPool.occupancy).
         out["mem_occupancy"] = (bounded_res / bounded_budget

@@ -53,7 +53,8 @@ class GrScheduler:
                  placement: str = "round-robin",
                  tenant_quotas: Optional[Mapping[str, int]] = None,
                  memory_budget: Budget = None,
-                 spill_tiers: Optional[Sequence] = None) -> None:
+                 spill_tiers: Optional[Sequence] = None,
+                 plan_optimize: bool = True) -> None:
         assert policy in ("serial", "parallel")
         self.policy = policy
         self.num_devices = max(1, num_devices)
@@ -90,8 +91,12 @@ class GrScheduler:
         # call launch()/host_read()/host_write()/sync() concurrently.
         self.pipeline = SubmissionPipeline(self)
         # Graph capture & replay (capture.py): cached execution plans plus
-        # the at-most-one active capture context.
+        # the at-most-one active capture context.  ``plan_optimize`` runs the
+        # plan-time global optimizer (planopt.py: min-cut placement + Belady
+        # memory scheduling) once at capture finalization; False keeps the
+        # greedy trace bit for bit.
         self.plan_cache = PlanCache()
+        self.plan_optimize = plan_optimize
         self._capture: Optional[CaptureContext] = None
 
     # ------------------------------------------------------------------
@@ -184,6 +189,7 @@ class GrScheduler:
                                      fn_key=fn_key)
             if device is not None:
                 e.device = device       # clamped by the pipeline's run stage
+                e.device_pinned = True  # plan optimizer must not move it
             if self.policy == "parallel":
                 self.pipeline.run(e)
             else:
@@ -366,6 +372,23 @@ class GrScheduler:
                     f"{dict(plan.device_mem)} but the current budgets are "
                     f"smaller; re-capture under the new budget instead")
             return replay_plan(self, plan, bindings)
+
+    def optimize_plan(self, plan: ExecutionPlan) -> ExecutionPlan:
+        """Explicitly re-run the plan-time global optimizer on a captured
+        plan (``planopt.py``): min-cut placement refinement plus Belady
+        memory scheduling.  Returns the rewritten plan (re-cached in place
+        of the original) or ``plan`` itself when no strict improvement is
+        possible.  Capture finalization already does this automatically
+        when ``plan_optimize`` is on."""
+        from .planopt import optimize_plan as _optimize
+        with self.pipeline:
+            new = _optimize(self, plan)
+            if new is not plan:
+                self.plan_cache.invalidate(plan)
+                self.streams.unreserve(plan.key)
+                for displaced in self.plan_cache.store(new):
+                    self.streams.unreserve(displaced.key)
+            return new
 
     # ------------------------------------------------------------------
     def sync(self) -> None:

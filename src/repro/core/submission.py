@@ -117,6 +117,26 @@ class SubmissionPipeline:
                               extra_pinned):
             self.evict(ma, priority=e.priority, tenant=e.tenant)
 
+    def reserve_plan(self, plan, extra_pinned: Optional[Iterable[int]] = None
+                     ) -> None:
+        """Budget stage for a Belady-scheduled plan replay: make room for
+        the plan's recorded per-device peaks once, up front.
+
+        A ``mem_scheduled`` plan carries its own EVICT elements — its
+        element order *is* the memory schedule — so the only possible
+        victims here are *foreign* leftovers from earlier episodes still
+        holding bytes the plan's peak needs.  Plan gating
+        (``plan_fits``) already guaranteed peak <= budget."""
+        sched = self.sched
+        mem = sched.memory
+        if not mem.bounded:
+            return
+        for device, peak in plan.device_mem:
+            for ma in mem.reserve_bytes(device, peak,
+                                        sched.dag.has_device_frontier,
+                                        extra_pinned):
+                self.evict(ma)
+
     def evict(self, ma, *, priority: int = 0,
               tenant: str = DEFAULT_TENANT) -> ComputationalElement:
         """Synthesize and schedule one EVICT element for ``ma``.

@@ -172,6 +172,33 @@ class Timeline:
     def busy_time(self, kind: str) -> float:
         return _measure(_union([(s.t0, s.t1) for s in self.spans if s.kind == kind]))
 
+    def reload_spans(self) -> List[Span]:
+        """H2D spans that re-upload a previously uploaded block.
+
+        Two sources: explicitly named ``reload_*`` transfers (Belady plans,
+        tier reloads) and *repeat* H2D uploads of a name already seen on
+        the H2D engine — the eager LRU path names every upload ``h2d_*``,
+        so a second upload of the same array is spill-return traffic."""
+        out: List[Span] = []
+        seen: set = set()
+        for s in sorted((s for s in self.spans if s.kind == "h2d"),
+                        key=lambda s: s.t0):
+            if s.name.startswith("reload_") or s.name in seen:
+                out.append(s)
+            seen.add(s.name)
+        return out
+
+    def reload_stall_s(self) -> float:
+        """Reload time *not* hidden behind compute — the stall a smarter
+        eviction/prefetch schedule can actually remove (reload bytes alone
+        conflate overlapped and blocking traffic)."""
+        ru = _union([(s.t0, s.t1) for s in self.reload_spans()])
+        if not ru:
+            return 0.0
+        comp = _union([(s.t0, s.t1) for s in self.spans
+                       if s.kind == "compute"])
+        return _measure(ru) - _measure(_intersect(ru, comp))
+
     def per_lane(self) -> Dict[int, List[Span]]:
         lanes: Dict[int, List[Span]] = {}
         for s in self.device_spans():

@@ -17,3 +17,29 @@ def pytest_collection_modifyitems(items):
         if (item.fspath.basename == "test_models.py"
                 and any(f"[{a}]" in item.name for a in _SLOW_ARCHS)):
             item.add_marker(pytest.mark.slow)
+
+
+@pytest.fixture(autouse=True)
+def _verify_memory_accounting(monkeypatch):
+    """Reconcile the MemoryManager's residency ledger at every ``sync``.
+
+    ``MemoryManager.verify()`` cross-checks logical residency (array
+    location bits, tier membership) against the pool ledger; running it at
+    each quiescent point turns silent accounting drift anywhere in the fast
+    suite into an immediate failure at the sync that caused it, instead of
+    a bogus eviction three scenarios later.  Sim-only: the real executor's
+    worker threads may still be installing physical values when ``sync``
+    observes the logical state mid-test teardown."""
+    from repro.core.scheduler import GrScheduler
+
+    orig_sync = GrScheduler.sync
+
+    def sync_and_verify(self, *a, **kw):
+        out = orig_sync(self, *a, **kw)
+        if type(self.executor).__name__ == "SimExecutor":
+            problems = self.memory.verify()
+            assert not problems, \
+                f"memory accounting drift at sync: {problems}"
+        return out
+
+    monkeypatch.setattr(GrScheduler, "sync", sync_and_verify)
