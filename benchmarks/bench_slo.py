@@ -1,0 +1,93 @@
+"""Deadline/SLO benchmark (simulated): EDF ordering + element-boundary
+preemption vs the deadline-blind scheduler under bulk-vs-latency contention.
+
+Runs the benchsuite SLO scenario twice on one simulated device with the
+bulk tenant quota-folded onto 4 lanes — ``baseline`` (no deadlines; the
+PR 7 scheduler, both tenants priority 0) and ``deadline`` (every latency
+launch carries ``deadline_s``) — and reports the latency tenant's p99
+completion latency, SLO attainment, the aggregate makespan and the EDF
+engagement counters.
+
+Acceptance targets (ISSUE 8), enforced as fail-fast gates: deadline'd p99
+for the latency tenant improves >= 2x over the baseline, aggregate makespan
+regresses <= 10%, and the EDF machinery actually engaged (deadlines
+stamped, EDF fill rounds taken, preemption fired).  Smoke mode shrinks the
+workload but keeps the same gates with a relaxed improvement floor.
+Results land in ``BENCH_slo.json``.
+"""
+from __future__ import annotations
+
+import json
+
+from repro.benchsuite.slo import (BULK_TENANT, LATENCY_TENANT,
+                                  build_slo_workload)
+from repro.core import make_scheduler
+
+from .common import emit
+
+BULK_QUOTA = 4
+
+
+def run_slo(use_deadlines: bool, **kw):
+    s = make_scheduler(simulate=True, num_devices=1,
+                       tenant_quotas={BULK_TENANT: BULK_QUOTA})
+    build_slo_workload(s, use_deadlines=use_deadlines, **kw)
+    s.sync()
+    ts = s.tenant_stats()
+    st = s.stats()
+    lat = ts[LATENCY_TENANT]
+    out = {
+        "makespan_s": s.timeline.makespan,
+        "latency_p99_s": lat["latency_p99_s"],
+        "latency_p50_s": lat["latency_p50_s"],
+        "bulk_makespan_s": ts[BULK_TENANT]["makespan_s"],
+        "slo_attainment": lat.get("slo_attainment"),
+        "deadline_elements": st.get("deadline_elements", 0),
+        "edf_fill_rounds": st.get("edf_fill_rounds", 0),
+        "edf_preemptions": st.get("edf_preemptions", 0),
+        "edf_preempt_events": st.get("edf_preempt_events", 0),
+    }
+    s.shutdown()
+    return out
+
+
+def main(smoke: bool = False) -> list:
+    # Smoke keeps two latency chains (the second chain's refill pressure is
+    # what trips preemption) and halves the bulk flood.
+    kw = ({"bulk_units": 16, "latency_chains": 2, "per_chain": 4}
+          if smoke else {})
+    min_improvement = 1.3 if smoke else 2.0
+    base = run_slo(use_deadlines=False, **kw)
+    dl = run_slo(use_deadlines=True, **kw)
+    improvement = base["latency_p99_s"] / dl["latency_p99_s"]
+    mk_ratio = dl["makespan_s"] / base["makespan_s"]
+    result = {"baseline": base, "deadline": dl,
+              "latency_p99_improvement": improvement,
+              "makespan_ratio": mk_ratio}
+    rows = [
+        ("slo/baseline", base["latency_p99_s"] * 1e6,
+         f"makespan_us={base['makespan_s'] * 1e6:.1f}"),
+        ("slo/deadline", dl["latency_p99_s"] * 1e6,
+         f"p99_improvement={improvement:.2f} "
+         f"makespan_ratio={mk_ratio:.3f} "
+         f"slo_attainment={dl['slo_attainment']} "
+         f"preemptions={dl['edf_preemptions']}"),
+    ]
+    if not smoke:
+        with open("BENCH_slo.json", "w") as f:
+            json.dump(result, f, indent=2, sort_keys=True)
+    emit(rows)
+    # Fail-fast gates: a silent regression here is a broken tentpole.
+    assert improvement >= min_improvement, (
+        f"SLO p99 improvement {improvement:.2f}x < {min_improvement}x")
+    assert mk_ratio <= 1.10, f"makespan regression {mk_ratio:.3f} > 1.10"
+    assert dl["deadline_elements"] > 0, "no deadlines were stamped"
+    assert dl["edf_fill_rounds"] > 0, "EDF capacity fill never engaged"
+    assert dl["edf_preemptions"] > 0, "element-boundary preemption never fired"
+    assert base["deadline_elements"] == 0, "baseline run saw deadlines"
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    main(smoke="--smoke" in sys.argv)

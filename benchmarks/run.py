@@ -13,7 +13,7 @@ def main() -> None:
     from . import (bench_api_overhead, bench_capture, bench_contention,
                    bench_hwmetrics, bench_memory, bench_multidevice,
                    bench_multitenant, bench_oracle, bench_overlap,
-                   bench_planopt, bench_roofline, bench_speedup)
+                   bench_planopt, bench_roofline, bench_slo, bench_speedup)
 
     suites = [
         ("API overhead: legacy vs GrFunction vs replay "
@@ -32,6 +32,8 @@ def main() -> None:
         ("Roofline (dry-run)", bench_roofline),
         ("Multi-device scaling", bench_multidevice),
         ("Multi-tenant QoS (BENCH_multitenant.json)", bench_multitenant),
+        ("Deadline/SLO: EDF + boundary preemption (BENCH_slo.json)",
+         bench_slo),
     ]
     failed = []
     for title, mod in suites:

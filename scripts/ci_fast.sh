@@ -29,4 +29,9 @@ python -m benchmarks.bench_memory --smoke
 # greedy vs optimized; fails fast when the optimized makespan or the
 # spill/D2D traffic exceeds greedy, or the optimizer never fired.
 python -m benchmarks.bench_planopt --smoke
+# Deadline/SLO smoke: bulk-vs-latency contention with and without
+# deadlines; fails fast when the p99 improvement drops under the floor,
+# the makespan regresses >10%, or EDF/preemption never engaged.
+python -m benchmarks.bench_slo --smoke
+python -m pytest -q tests/test_slo.py
 exec python -m pytest -q -m "not slow" "$@"

@@ -1,7 +1,8 @@
 """GrJAX core: the paper's runtime DAG scheduler (see DESIGN.md §1-2)."""
 from .element import (AccessMode, Arg, ComputationalElement, DEFAULT_TENANT,
-                      ElementKind, PRIORITY_WEIGHT_BASE, const, dep_key,
-                      inout, kernel, out, priority_weight)
+                      ElementKind, ElementState, PRIORITY_WEIGHT_BASE, const,
+                      dep_key, inout, kernel, out, priority_weight)
+from .deadlines import DeadlineMonitor
 from .dag import ComputationDAG, DAGSnapshot
 from .capture import (CaptureContext, ExecutionPlan, PlanCache, PlanElement,
                       SlotSpec)
@@ -24,7 +25,8 @@ from .frontend import (GrFunction, NoActiveRuntimeError, current_runtime,
 
 __all__ = [
     "AccessMode", "Arg", "ComputationalElement", "DEFAULT_TENANT",
-    "ElementKind", "PRIORITY_WEIGHT_BASE",
+    "ElementKind", "ElementState", "PRIORITY_WEIGHT_BASE",
+    "DeadlineMonitor",
     "const", "dep_key", "inout", "kernel", "out", "priority_weight",
     "SubmissionPipeline",
     "ComputationDAG", "DAGSnapshot",

@@ -177,6 +177,11 @@ class PlanElement:
     # so replay always reproduces the captured capacity weighting.
     priority: int = 0
     tenant: str = DEFAULT_TENANT
+    # Relative deadline window (seconds).  Part of the signature — a plan
+    # captured without deadlines must not replay a deadline'd episode (EDF
+    # ordering and preemption eligibility differ).  The *absolute* deadline
+    # is never captured: replay re-stamps ``deadline_t`` at submission time.
+    deadline_s: Optional[float] = None
     # Declared-function identity (GrFunction frontend).  Part of the
     # signature: two declarations that happen to share a kernel name never
     # alias each other's plans, while one declaration whose Python closure
@@ -338,6 +343,7 @@ class _Draft:
     raw_config: dict = field(default_factory=dict)
     priority: int = 0
     tenant: str = DEFAULT_TENANT
+    deadline_s: Optional[float] = None
     fn_key: Optional[int] = None
     pinned: bool = False
 
@@ -484,7 +490,8 @@ class _Recorder:
             device=e.device if e.device is not None else 0,
             src_device=e.src_device, parents=parents, fn=e.fn,
             raw_config=dict(e.config),
-            priority=e.priority, tenant=e.tenant, fn_key=e.fn_key,
+            priority=e.priority, tenant=e.tenant,
+            deadline_s=e.deadline_s, fn_key=e.fn_key,
             pinned=bool(getattr(e, "device_pinned", False))))
 
     def build(self, name: str) -> Optional[ExecutionPlan]:
@@ -496,8 +503,8 @@ class _Recorder:
             cost_s=d.cost_s, transfer_bytes=d.transfer_bytes,
             arg_slots=d.arg_slots, lane=lane, device=d.device,
             src_device=d.src_device, parents=d.parents, wait_events=events,
-            priority=d.priority, tenant=d.tenant, fn_key=d.fn_key,
-            pinned=d.pinned)
+            priority=d.priority, tenant=d.tenant, deadline_s=d.deadline_s,
+            fn_key=d.fn_key, pinned=d.pinned)
             for d, (lane, events) in zip(self.drafts, placed))
         return ExecutionPlan(
             name=name, key=f"{name}#{next(_PLAN_IDS)}",
@@ -547,7 +554,8 @@ def _match_kernel(plan: ExecutionPlan, kpos: int, bound: List[Any],
                   name: str, cfg_items: Tuple, cost_s: float,
                   priority: int = 0, tenant: str = DEFAULT_TENANT,
                   device: Optional[int] = None,
-                  fn_key: Optional[int] = None
+                  fn_key: Optional[int] = None,
+                  deadline_s: Optional[float] = None
                   ) -> Optional[Dict[int, Any]]:
     """Check one user launch against the plan's next kernel.  Returns the
     new slot bindings on a match, None on any mismatch."""
@@ -556,6 +564,9 @@ def _match_kernel(plan: ExecutionPlan, kpos: int, bound: List[Any],
         return None
     if pe.priority != priority or pe.tenant != tenant:
         return None     # QoS retag: record a fresh plan with the new weights
+    if pe.deadline_s != deadline_s:
+        return None     # deadline retag: EDF rank/preemption eligibility
+        #                 differ — record a fresh plan
     if pe.fn_key != fn_key:
         return None     # a different declared GrFunction (or legacy launch)
     if device is not None and pe.device != device:
@@ -656,7 +667,12 @@ def _flush_range(sched, r: _ReplayState, hi_inclusive: int,
             fn=fn, args=args, kind=pe.kind, name=pe.name,
             config=dict(plan.configs[idx]), cost_s=pe.cost_s,
             transfer_bytes=pe.transfer_bytes,
-            priority=pe.priority, tenant=pe.tenant, fn_key=pe.fn_key)
+            priority=pe.priority, tenant=pe.tenant,
+            deadline_s=pe.deadline_s, fn_key=pe.fn_key)
+        # Re-stamp the absolute deadline at *replay* submission time (the
+        # capture-time deadline_t would be long expired) and register with
+        # the monitor for EDF/risk tracking.
+        sched.deadlines.tag(ce)
         ce.device = pe.device
         ce.src_device = pe.src_device
         ce.device_pinned = pe.pinned    # survives a seed_from_replay re-trace
@@ -706,6 +722,10 @@ def _flush_range(sched, r: _ReplayState, hi_inclusive: int,
             sched.d2d_transfers += 1
         _apply_location_bits(sched, pe, r.bound)
     sched.executor.submit_batch(items)
+    if items and items[-1][0].deadline_t is not None:
+        # Deadline'd replay flush: run the submission-time risk check once
+        # per batch (the caller holds the pipeline lock on this path).
+        sched.deadlines.on_submit(items[-1][0])
     r.flushed = hi_inclusive + 1
     return r.new_elements[hi_inclusive]
 
@@ -945,7 +965,8 @@ class CaptureContext:
     def offer(self, fn: Optional[Callable], args: Sequence[Arg], name: str,
               config: dict, cost_s: float, priority: int = 0,
               tenant: str = DEFAULT_TENANT, device: Optional[int] = None,
-              fn_key: Optional[int] = None
+              fn_key: Optional[int] = None,
+              deadline_s: Optional[float] = None
               ) -> Optional[ComputationalElement]:
         """Called by ``GrScheduler._launch`` before the eager path.  Returns
         the replayed element on a plan hit, or None to fall through (the
@@ -960,7 +981,8 @@ class CaptureContext:
             for plan in self.candidates:
                 bind = _match_kernel(plan, 0, [None] * len(plan.slots), {},
                                      args, name, cfg_items, cost_s,
-                                     priority, tenant, device, fn_key)
+                                     priority, tenant, device, fn_key,
+                                     deadline_s)
                 if bind is not None:
                     self.replay = r = _ReplayState(self.sched, plan)
                     return self._commit(r, bind, fn)
@@ -973,7 +995,8 @@ class CaptureContext:
         else:
             bind = _match_kernel(r.plan, r.kpos, r.bound, r.bound_keys,
                                  args, name, cfg_items, cost_s,
-                                 priority, tenant, device, fn_key)
+                                 priority, tenant, device, fn_key,
+                                 deadline_s)
         if bind is None:
             # Divergence: drop the stale plan, transplant the replayed
             # prefix into a recording, and let the eager path trace the

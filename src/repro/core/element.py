@@ -97,6 +97,23 @@ class ElementKind(enum.Enum):
     SYNC = "sync"                # explicit barrier requested by the host
 
 
+class ElementState(enum.Enum):
+    """Element lifecycle, as the executors see it.
+
+    ``PAUSED`` is the element-boundary preemption state: a queued (never
+    started) element whose lane yields to deadline-urgent work.  A paused
+    element stays exactly where it is in its lane's FIFO — pausing blocks
+    the lane in place, it never reorders it, because same-lane children
+    rely on queue order instead of completion events.  Running work is
+    never interrupted (no mid-kernel preemption)."""
+
+    PENDING = "pending"    # constructed, not yet handed to an executor
+    QUEUED = "queued"      # submitted, waiting for lane/parents
+    PAUSED = "paused"      # queued but yielding to at-risk deadline work
+    RUNNING = "running"    # on the device (or worker thread)
+    DONE = "done"          # completed
+
+
 @dataclass
 class ComputationalElement:
     """A vertex of the computation DAG.
@@ -124,6 +141,14 @@ class ComputationalElement:
     # and (optional) lane quotas.
     priority: int = 0
     tenant: str = DEFAULT_TENANT
+    # Deadline/SLO-aware scheduling (EDF): ``deadline_s`` is the declared
+    # per-launch latency budget (seconds from submission; None = no
+    # deadline); ``deadline_t`` is the absolute deadline stamped at
+    # submission time (host clock).  Auto-inserted TRANSFER/D2D/EVICT
+    # children inherit both from the kernel that triggered them so the
+    # whole urgent frontier carries one EDF rank.
+    deadline_s: Optional[float] = None
+    deadline_t: Optional[float] = None
     # Declared-function identity (GrFunction frontend): launches issued
     # through the same declared ``GrFunction`` share one ``fn_key`` even when
     # the underlying Python callable is re-created per episode, and two
@@ -151,7 +176,10 @@ class ComputationalElement:
     # dependency set: argument keys that can still introduce dependencies
     dep_set: set = field(default_factory=set)
     active: bool = False
+    state: ElementState = ElementState.PENDING
     done_event: Any = None             # executor-specific completion handle
+    pause_gate: Any = None             # threading.Event (real executor only):
+    #                                    cleared = paused, worker blocks on it
     # timeline bookkeeping (filled by executors)
     t_issue: float = float("nan")      # submission time (queueing-delay base)
     t_start: float = float("nan")
@@ -161,6 +189,16 @@ class ComputationalElement:
     def weight(self) -> float:
         """Space-sharing weight derived from ``priority``."""
         return priority_weight(self.priority)
+
+    @property
+    def effective_deadline(self) -> float:
+        """EDF sort key: absolute deadline, or +inf for deadline-free work.
+
+        Comparisons between two deadline-free elements are always vacuous
+        (``inf > inf`` is False), which is what keeps every EDF tie-break a
+        no-op — and the schedule bit-identical — when no deadlines are in
+        play."""
+        return float("inf") if self.deadline_t is None else self.deadline_t
 
     def __post_init__(self) -> None:
         if not self.name:

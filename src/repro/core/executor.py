@@ -27,7 +27,7 @@ from typing import Deque, Dict, List, Optional
 
 import numpy as np
 
-from .element import ComputationalElement, ElementKind
+from .element import ComputationalElement, ElementKind, ElementState
 from .history import KernelHistory
 from .timeline import Timeline
 
@@ -43,6 +43,27 @@ class Executor:
     # cannot stall other tenants' launches (priority-inversion guard).
     # The simulator advances a shared clock in wait(), so it stays False.
     concurrent_waits = False
+    # True when pausing a queued element requires a pause_gate event the
+    # lane worker blocks on (real threads); the simulator pauses purely
+    # via ElementState.PAUSED.
+    pause_via_gates = False
+    # Deadline-monitor hooks (installed by GrScheduler; None = no-op).
+    # ``on_boundary(element)`` fires at every element completion — the
+    # deadline-risk re-check point.  ``on_stall(element_or_None) -> bool``
+    # fires when a host wait cannot make progress; it resumes paused work
+    # and returns True when it changed anything.
+    on_boundary = None
+    on_stall = None
+
+    def _notify_boundary(self, element: ComputationalElement) -> None:
+        cb = self.on_boundary
+        if cb is not None:
+            cb(element)
+
+    def device_now(self) -> float:
+        """Clock deadline-risk checks compare deadlines against: the sim
+        clock mid-advance, the host clock on real executors."""
+        return self.host_now()
 
     def submit(self, element: ComputationalElement, lane_id: int,
                wait_parents: List[ComputationalElement]) -> None:
@@ -178,6 +199,16 @@ class _LaneWorker(threading.Thread):
             try:
                 while waits:        # pop: no loop variable may outlive the
                     waits.pop().done_event.wait()   # wait (see finally below)
+                # Element-boundary preemption: a paused element blocks its
+                # lane *in place* (FIFO order is a dependency carrier — the
+                # queue must never be reordered) until the deadline monitor
+                # resumes it.  A gate published after this check simply
+                # means the element already started: running work is never
+                # interrupted.
+                gate = element.pause_gate
+                if gate is not None:
+                    gate.wait()
+                element.state = ElementState.RUNNING
                 t0 = self.executor.host_now()
                 _run_device_element(element,
                                     self.executor.jax_device_for(element))
@@ -193,14 +224,16 @@ class _LaneWorker(threading.Thread):
                 self.executor.timeline.record(
                     element.uid, element.name, kind, self.lane_id, t0, t1,
                     tenant=element.tenant, priority=element.priority,
-                    t_issue=element.t_issue)
+                    t_issue=element.t_issue, deadline=element.deadline_t)
                 if element.kind is ElementKind.KERNEL:
                     self.executor.history.record(
                         element.name, element.config, t1 - t0)
             except BaseException as exc:  # surfaced on wait()
                 element.error = exc
             finally:
+                element.state = ElementState.DONE
                 element.done_event.set()
+                self.executor._notify_boundary(element)
                 self.q.task_done()
                 # An idle worker blocked on q.get must not keep its last
                 # element's graph (and, through the args, the arrays)
@@ -211,6 +244,7 @@ class _LaneWorker(threading.Thread):
 
 class ThreadLaneExecutor(Executor):
     concurrent_waits = True     # wait() is a pure event wait
+    pause_via_gates = True      # paused elements block their lane worker
 
     def __init__(self, num_devices: int = 1) -> None:
         self.timeline = Timeline()
@@ -246,6 +280,7 @@ class ThreadLaneExecutor(Executor):
     def submit(self, element, lane_id, wait_parents) -> None:
         element.done_event = threading.Event()
         element.error = None
+        element.state = ElementState.QUEUED
         element.t_issue = self.host_now()
         self._submitted.append(element)
         self._worker(lane_id).q.put((element, list(wait_parents)))
@@ -257,6 +292,7 @@ class ThreadLaneExecutor(Executor):
         for element, _, _ in items:
             element.done_event = threading.Event()
             element.error = None
+            element.state = ElementState.QUEUED
             element.t_issue = self.host_now()
         for element, lane_id, waits in items:
             self._submitted.append(element)
@@ -267,9 +303,19 @@ class ThreadLaneExecutor(Executor):
         return ev is not None and ev.is_set()
 
     def wait(self, element) -> None:
-        if element.done_event is None:
+        ev = element.done_event
+        if ev is None:
             return
-        element.done_event.wait()
+        stall = self.on_stall
+        if stall is None:
+            ev.wait()
+        else:
+            # A host wait must never deadlock on paused (preempted) work:
+            # poll, giving the deadline monitor a chance to resume anything
+            # the host is now blocked on.  Event.wait returns as soon as the
+            # event is set, so completed elements pay no extra latency.
+            while not ev.wait(0.02):
+                stall(element)
         if getattr(element, "error", None) is not None:
             raise element.error
 
@@ -279,6 +325,8 @@ class ThreadLaneExecutor(Executor):
         self._submitted.clear()
 
     def shutdown(self) -> None:
+        if self.on_stall is not None:
+            self.on_stall(None)   # resume paused work so workers can drain
         for w in self._lanes.values():
             w.q.put(None)
         self._lanes.clear()
@@ -348,6 +396,8 @@ class SimExecutor(Executor):
         self.history = KernelHistory()
         self.now = 0.0                    # device/simulation clock
         self.host_time = 0.0              # host program clock
+        self.edf_fill_rounds = 0          # rate recomputes where the EDF
+        #                                   layer handed capacity out first
         self._pending: List[_SimTask] = []
         self._running: List[_SimTask] = []
         self._end: Dict[int, float] = {}   # uid -> completion time
@@ -359,6 +409,9 @@ class SimExecutor(Executor):
     # -- host clock ----------------------------------------------------
     def host_now(self) -> float:
         return self.host_time
+
+    def device_now(self) -> float:
+        return max(self.now, self.host_time)
 
     def host_overhead(self, seconds: float) -> None:
         self.host_time += seconds
@@ -413,6 +466,7 @@ class SimExecutor(Executor):
                         weight=element.weight,
                         gbps=element.config.get("tier_gbps"))
         element.t_issue = self.host_time
+        element.state = ElementState.QUEUED
         self._pending.append(task)
         self._lane_q.setdefault(lane_id, deque()).append(element.uid)
 
@@ -430,10 +484,14 @@ class SimExecutor(Executor):
         while started:
             started = False
             for t in list(self._pending):
+                # A PAUSED lane head yields without reordering: it simply
+                # blocks its lane until the deadline monitor resumes it.
                 if (t.issue_t <= self.now + 1e-18 and self._lane_head(t)
+                        and t.element.state is not ElementState.PAUSED
                         and self._parents_done(t.element)):
                     self._pending.remove(t)
                     t.t_start = self.now
+                    t.element.state = ElementState.RUNNING
                     self._running.append(t)
                     started = True
         self._recompute_rates()
@@ -452,6 +510,22 @@ class SimExecutor(Executor):
                 by_dev.setdefault(t.device, []).append(t)
         for comp in by_dev.values():
             remaining = 1.0
+            # EDF layer: deadline'd kernels take their full parallel
+            # fraction in earliest-deadline order *before* any deadline-free
+            # kernel sees capacity; deadline-free work then water-fills the
+            # leftovers exactly as before.  With no deadlines in flight
+            # ``urgent`` is empty and the fill below is bit-identical to the
+            # pre-EDF scheduler.
+            urgent = [t for t in comp if t.element.deadline_t is not None]
+            if urgent:
+                self.edf_fill_rounds += 1
+                urgent.sort(key=lambda t: (t.element.deadline_t,
+                                           t.element.uid))
+                for t in urgent:
+                    a = min(t.pf, remaining)
+                    t.rate = (a / t.pf) if t.pf > 0 else 1.0
+                    remaining -= a
+                comp = [t for t in comp if t.element.deadline_t is None]
             todo = sorted(comp, key=lambda t: t.pf / max(t.weight, 1e-12))
             total_w = sum(t.weight for t in todo)
             for t in todo:
@@ -528,15 +602,19 @@ class SimExecutor(Executor):
         e = t.element
         self._end[e.uid] = self.now
         e.t_start, e.t_end = t.t_start, self.now
+        e.state = ElementState.DONE
         # Only the lane head may run, so the finishing task IS the head.
         self._lane_q[t.lane].popleft()
         self.timeline.record(e.uid, e.name, t.kind, t.lane, t.t_start, self.now,
                              tenant=e.tenant, priority=e.priority,
-                             t_issue=t.issue_t)
+                             t_issue=t.issue_t, deadline=e.deadline_t)
         if t.kind == "compute":
             self.history.record(e.name, e.config, self.now - t.t_start)
         # Logical array-location bits are owned by the scheduler and were
         # already flipped at schedule time; nothing to do here.
+        # Element boundary: the deadline monitor re-checks slack here and
+        # may pause/resume queued work before the next _try_start scan.
+        self._notify_boundary(e)
 
     # -- waiting -----------------------------------------------------------
     def is_done(self, element) -> bool:
@@ -545,6 +623,13 @@ class SimExecutor(Executor):
     def wait(self, element) -> None:
         if element.uid not in self._end:
             self._advance_to(float("inf"))
+        if element.uid not in self._end and self.on_stall is not None:
+            # Everything runnable ran; if the target is (transitively)
+            # behind paused/preempted work, resume it and advance again.
+            while self.on_stall(element):
+                self._advance_to(float("inf"))
+                if element.uid in self._end:
+                    break
         if element.uid not in self._end:
             raise RuntimeError(
                 f"simulation deadlock waiting for {element.name}; "
@@ -553,6 +638,11 @@ class SimExecutor(Executor):
 
     def wait_all(self) -> None:
         self._advance_to(float("inf"))
+        if (self._pending or self._running) and self.on_stall is not None:
+            while self.on_stall(None):
+                self._advance_to(float("inf"))
+                if not (self._pending or self._running):
+                    break
         if self._pending or self._running:
             raise RuntimeError("simulation finished with unrunnable tasks "
                                f"{[t.element.name for t in self._pending]}")

@@ -59,7 +59,7 @@ _MODE_NAMES: Dict[str, AccessMode] = {
 # passes to with_options()/``__call__`` merges into the launch config
 # (e.g. ``parallel_fraction`` for the simulator's occupancy model).
 _OPTION_KEYS = ("scheduler", "name", "priority", "tenant", "cost_s",
-                "device", "tune", "outputs")
+                "device", "tune", "outputs", "deadline_s")
 
 
 class NoActiveRuntimeError(RuntimeError):
@@ -194,6 +194,7 @@ class GrFunction:
                  priority: int = 0,
                  tenant: str = DEFAULT_TENANT,
                  device: Optional[int] = None,
+                 deadline_s: Optional[float] = None,
                  _fid: Optional[int] = None) -> None:
         self.fn = fn
         self.modes: Tuple[AccessMode, ...] = tuple(
@@ -210,6 +211,7 @@ class GrFunction:
         self.priority = priority
         self.tenant = tenant
         self.device = device
+        self.deadline_s = deadline_s
 
     # -- declaration helpers -------------------------------------------
     def _out_positions(self) -> Tuple[int, ...]:
@@ -287,7 +289,8 @@ class GrFunction:
     def with_options(self, **opts) -> "GrFunction":
         """Return a variant with call-scoped options bound (same declared
         identity).  Known keys: ``scheduler, name, priority, tenant, cost_s,
-        device, tune``; anything else merges into the launch config."""
+        device, tune, deadline_s``; anything else merges into the launch
+        config."""
         known = {k: opts.pop(k) for k in _OPTION_KEYS if k in opts}
         if "outputs" in known:
             outputs = known["outputs"]      # re-normalized by the ctor
@@ -304,6 +307,7 @@ class GrFunction:
             priority=known.get("priority", self.priority),
             tenant=known.get("tenant", self.tenant),
             device=known.get("device", self.device),
+            deadline_s=known.get("deadline_s", self.deadline_s),
             _fid=self.fid)
 
     # -- the call -------------------------------------------------------
@@ -364,7 +368,7 @@ class GrFunction:
         element = sched._launch(
             gf.fn, args, name=gf.name, cost_s=gf.cost_s, tune=gf.tune,
             priority=gf.priority, tenant=gf.tenant, device=gf.device,
-            fn_key=gf.fid, **gf.config)
+            deadline_s=gf.deadline_s, fn_key=gf.fid, **gf.config)
         if allocated:
             return allocated[0] if len(allocated) == 1 else tuple(allocated)
         return element

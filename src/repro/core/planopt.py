@@ -318,7 +318,7 @@ def _resynthesize(sched, plan: ExecutionPlan,
     def add_draft(kind, name, arg_slots, dep_modes, device, *,
                   src_device=None, transfer_bytes=0, raw=None, config=None,
                   cost_s=0.0, fn=None, priority=0, tenant=DEFAULT_TENANT,
-                  fn_key=None, pinned=False) -> None:
+                  deadline_s=None, fn_key=None, pinned=False) -> None:
         raw = {} if raw is None else raw
         idx = len(drafts)
         parents: Dict[int, None] = {}   # insertion-ordered de-dup
@@ -335,7 +335,8 @@ def _resynthesize(sched, plan: ExecutionPlan,
             cost_s=cost_s, transfer_bytes=transfer_bytes,
             arg_slots=tuple(arg_slots), device=device, src_device=src_device,
             parents=tuple(parents), fn=fn, raw_config=raw,
-            priority=priority, tenant=tenant, fn_key=fn_key, pinned=pinned))
+            priority=priority, tenant=tenant, deadline_s=deadline_s,
+            fn_key=fn_key, pinned=pinned))
         for slot, mode in dep_modes:
             if mode.writes:
                 last_writer[slot] = idx
@@ -391,7 +392,8 @@ def _resynthesize(sched, plan: ExecutionPlan,
                               ((s, AccessMode.INOUT),), d,
                               transfer_bytes=nb if dirty else 0,
                               raw={"writeback": dirty},
-                              priority=pe.priority, tenant=pe.tenant)
+                              priority=pe.priority, tenant=pe.tenant,
+                              deadline_s=pe.deadline_s)
                     host_valid[s] = True
                     device_valid[s] = False
                     device_id[s] = None
@@ -417,7 +419,8 @@ def _resynthesize(sched, plan: ExecutionPlan,
                           ((slot, AccessMode.INOUT),),
                           ((slot, AccessMode.INOUT),), d,
                           transfer_bytes=nb,
-                          priority=pe.priority, tenant=pe.tenant)
+                          priority=pe.priority, tenant=pe.tenant,
+                          deadline_s=pe.deadline_s)
                 device_valid[slot] = True
                 device_id[slot] = d
                 if nb > 0:
@@ -429,7 +432,8 @@ def _resynthesize(sched, plan: ExecutionPlan,
                           ((slot, AccessMode.INOUT),),
                           ((slot, AccessMode.INOUT),), d,
                           src_device=src, transfer_bytes=nb,
-                          priority=pe.priority, tenant=pe.tenant)
+                          priority=pe.priority, tenant=pe.tenant,
+                          deadline_s=pe.deadline_s)
                 device_id[slot] = d
                 if nb > 0:
                     if resident.get(slot) == src:
@@ -442,7 +446,7 @@ def _resynthesize(sched, plan: ExecutionPlan,
                   d, transfer_bytes=pe.transfer_bytes, config=pe.config,
                   raw=plan.configs[orig], cost_s=pe.cost_s,
                   fn=plan.fns[orig], priority=pe.priority, tenant=pe.tenant,
-                  fn_key=pe.fn_key, pinned=pe.pinned)
+                  deadline_s=pe.deadline_s, fn_key=pe.fn_key, pinned=pe.pinned)
         for slot, mode in merged.items():
             if not mode.writes:
                 continue
@@ -463,8 +467,8 @@ def _resynthesize(sched, plan: ExecutionPlan,
         cost_s=dr.cost_s, transfer_bytes=dr.transfer_bytes,
         arg_slots=dr.arg_slots, lane=lane, device=dr.device,
         src_device=dr.src_device, parents=dr.parents, wait_events=events,
-        priority=dr.priority, tenant=dr.tenant, fn_key=dr.fn_key,
-        pinned=dr.pinned)
+        priority=dr.priority, tenant=dr.tenant, deadline_s=dr.deadline_s,
+        fn_key=dr.fn_key, pinned=dr.pinned)
         for dr, (lane, events) in zip(drafts, placed))
     return ExecutionPlan(
         name=plan.name, key=f"{plan.name}#{next(_PLAN_IDS)}",

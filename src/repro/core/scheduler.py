@@ -24,8 +24,9 @@ import numpy as np
 
 from .capture import CaptureContext, ExecutionPlan, PlanCache, replay_plan
 from .dag import ComputationDAG
+from .deadlines import DeadlineMonitor
 from .element import (Arg, ComputationalElement, DEFAULT_TENANT, ElementKind,
-                      const, dep_key, inout, out)
+                      ElementState, const, dep_key, inout, out)
 from .executor import Executor, SimExecutor, SimHardware, ThreadLaneExecutor
 from .managed import ManagedArray
 from .memory import Budget, MemoryManager
@@ -54,7 +55,8 @@ class GrScheduler:
                  tenant_quotas: Optional[Mapping[str, int]] = None,
                  memory_budget: Budget = None,
                  spill_tiers: Optional[Sequence] = None,
-                 plan_optimize: bool = True) -> None:
+                 plan_optimize: bool = True,
+                 slo_targets: Optional[Mapping[str, float]] = None) -> None:
         assert policy in ("serial", "parallel")
         self.policy = policy
         self.num_devices = max(1, num_devices)
@@ -98,6 +100,15 @@ class GrScheduler:
         self.plan_cache = PlanCache()
         self.plan_optimize = plan_optimize
         self._capture: Optional[CaptureContext] = None
+        # Deadline/SLO-aware scheduling (deadlines.py): per-tenant SLO
+        # targets auto-stamp deadlines on launches; the monitor owns the
+        # slack estimator and element-boundary preemption.  All hooks
+        # early-out while no deadline exists, so deadline-free schedules
+        # stay bit-identical.
+        self.deadlines = DeadlineMonitor(self, slo_targets)
+        self.deadlines.full_boundary_checks = not self.executor.concurrent_waits
+        self.executor.on_boundary = self.deadlines.on_boundary
+        self.executor.on_stall = self.deadlines.ensure_progress
 
     # ------------------------------------------------------------------
     def array(self, data=None, *, shape=None, dtype=np.float32,
@@ -112,6 +123,7 @@ class GrScheduler:
             ev = threading.Event()
             ev.set()
             e.done_event = ev
+        e.state = ElementState.DONE
         e.t_start = e.t_end = self.executor.host_now()
 
     def _schedule(self, e: ComputationalElement) -> None:
@@ -126,6 +138,7 @@ class GrScheduler:
                name: str = "", cost_s: float = 0.0,
                tune: Optional[dict] = None,
                priority: int = 0, tenant: str = DEFAULT_TENANT,
+               deadline_s: Optional[float] = None,
                **config) -> ComputationalElement:
         """Deprecated shim over the submission engine (:meth:`_launch`).
 
@@ -142,7 +155,8 @@ class GrScheduler:
             "repro.api.function(fn, modes=...) and call the GrFunction "
             "directly", DeprecationWarning, stacklevel=2)
         return self._launch(fn, args, name=name, cost_s=cost_s, tune=tune,
-                            priority=priority, tenant=tenant, **config)
+                            priority=priority, tenant=tenant,
+                            deadline_s=deadline_s, **config)
 
     def _launch(self, fn: Optional[Callable], args: Sequence[Arg], *,
                 name: str = "", cost_s: float = 0.0,
@@ -150,6 +164,7 @@ class GrScheduler:
                 priority: int = 0, tenant: str = DEFAULT_TENANT,
                 device: Optional[int] = None,
                 fn_key: Optional[int] = None,
+                deadline_s: Optional[float] = None,
                 **config) -> ComputationalElement:
         """Submission engine: issue one kernel, dependencies & lane inferred.
 
@@ -179,17 +194,22 @@ class GrScheduler:
             if cap is not None:
                 replayed = cap.offer(fn, tuple(args), name, config, cost_s,
                                      priority=priority, tenant=tenant,
-                                     device=device, fn_key=fn_key)
+                                     device=device, fn_key=fn_key,
+                                     deadline_s=deadline_s)
                 if replayed is not None:
                     return replayed     # plan hit: submitted via the fast path
             e = ComputationalElement(fn=fn, args=tuple(args),
                                      kind=ElementKind.KERNEL, name=name,
                                      config=config, cost_s=cost_s,
                                      priority=priority, tenant=tenant,
-                                     fn_key=fn_key)
+                                     fn_key=fn_key, deadline_s=deadline_s)
             if device is not None:
                 e.device = device       # clamped by the pipeline's run stage
                 e.device_pinned = True  # plan optimizer must not move it
+            # Stamp the absolute deadline (explicit or tenant-SLO) before
+            # the pipeline runs, so auto-inserted transfer children inherit
+            # the same EDF rank.
+            self.deadlines.tag(e)
             if self.policy == "parallel":
                 self.pipeline.run(e)
             else:
@@ -431,14 +451,18 @@ class GrScheduler:
                 **self.streams.stats(),
                 **self.executor.history.stats(),
                 **self.plan_cache.stats(),
-                **self.memory.stats()}
+                **self.memory.stats(),
+                **self.deadlines.stats()}
 
     def tenant_stats(self) -> dict:
         """Per-tenant QoS metrics (makespan, queueing delay, completion
-        latency p50/p99) computed from the execution timeline."""
+        latency p50/p99, and — for deadline'd tenants — SLO attainment)
+        computed from the execution timeline."""
         return self.timeline.tenant_stats()
 
     def shutdown(self) -> None:
+        # Paused (preempted) work must drain before workers are stopped.
+        self.deadlines.resume_all()
         self.executor.shutdown()
         # Release tier backing resources (spool directories, compressed
         # payloads) — no leaked spool files after a scheduler is retired.

@@ -56,15 +56,46 @@ class Lane:
     # from the eager scheduler's FIFO-reuse pool, so interleaved eager work
     # cannot serialize into a replayed episode's queues.
     reserved: bool = False
+    # Incremental per-tenant occupancy (count of in-flight elements per
+    # tenant) maintained on every add/prune/release, so quota checks do not
+    # rescan ``in_flight``.  ``manager`` (set by StreamManager._new_lane)
+    # receives busy-lane transitions (0 -> >0 and back) per tenant.
+    manager: Optional["StreamManager"] = None
+    _tenant_counts: Dict[str, int] = field(default_factory=dict)
+
+    def _note_add(self, e: ComputationalElement) -> None:
+        n = self._tenant_counts.get(e.tenant, 0)
+        self._tenant_counts[e.tenant] = n + 1
+        if n == 0 and self.manager is not None:
+            self.manager._busy_transition(self, e.tenant, +1)
+
+    def _note_remove(self, e: ComputationalElement) -> None:
+        n = self._tenant_counts.get(e.tenant, 0)
+        if n <= 1:
+            self._tenant_counts.pop(e.tenant, None)
+            if n == 1 and self.manager is not None:
+                self.manager._busy_transition(self, e.tenant, -1)
+        else:
+            self._tenant_counts[e.tenant] = n - 1
+
+    def add(self, e: ComputationalElement) -> None:
+        self.in_flight.append(e)
+        self._note_add(e)
 
     def pending(self, is_done: Callable[[ComputationalElement], bool]) -> int:
-        self.in_flight = [e for e in self.in_flight if not is_done(e)]
-        return len(self.in_flight)
+        alive: List[ComputationalElement] = []
+        for e in self.in_flight:
+            if is_done(e):
+                self._note_remove(e)
+            else:
+                alive.append(e)
+        self.in_flight = alive
+        return len(alive)
 
     def serves(self, tenant: str) -> bool:
         """Whether any in-flight element belongs to ``tenant`` (per-tenant
         lane quotas count a shared lane for every tenant queued on it)."""
-        return any(e.tenant == tenant for e in self.in_flight)
+        return self._tenant_counts.get(tenant, 0) > 0
 
     def load(self, is_done) -> float:
         """Cost-weighted outstanding work (used by min-load placement)."""
@@ -76,6 +107,13 @@ class Lane:
         if not self.in_flight:
             return None
         return min(e.priority for e in self.in_flight)
+
+    def min_deadline(self) -> float:
+        """Earliest effective deadline queued on this lane (inf when idle or
+        when every queued element is deadline-free)."""
+        if not self.in_flight:
+            return float("inf")
+        return min(e.effective_deadline for e in self.in_flight)
 
 
 # ======================================================================
@@ -209,8 +247,17 @@ class StreamManager:
         self.events_cross_device = 0
         self.priority_bypasses = 0   # saturated fallbacks that dodged a
         #                              lower-priority lane tail
+        self.edf_bypasses = 0        # saturated fallbacks that dodged a
+        #                              later-deadline lane tail (EDF)
         self.quota_fallbacks = 0     # submissions folded onto a tenant's own
         #                              lanes because its quota was reached
+        # Incremental (device, tenant) -> busy-lane count, maintained by the
+        # lanes' _note_add/_note_remove transitions.  An *upper bound*: a
+        # lane leaves the count only when its finished elements are pruned
+        # (pending()/release()), so ``count < quota`` proves the precise scan
+        # would pass and the scan is skipped; ``count >= quota`` falls back
+        # to the pruning scan for the exact answer.
+        self._tenant_busy: Dict[Tuple[int, str], int] = {}
         # plan key -> list of reserved lane-set instances, each mapping the
         # plan-local lane id to a real lane id (capture/replay, §V-D oracle).
         self._plan_lanes: Dict[str, List[Dict[int, int]]] = {}
@@ -248,8 +295,21 @@ class StreamManager:
         return d
 
     # ------------------------------------------------------------------
+    def _busy_transition(self, lane: Lane, tenant: str, delta: int) -> None:
+        key = (lane.device_id, tenant)
+        n = self._tenant_busy.get(key, 0) + delta
+        if n <= 0:
+            self._tenant_busy.pop(key, None)
+        else:
+            self._tenant_busy[key] = n
+
+    def busy_lanes(self, device: int, tenant: str) -> int:
+        """Upper bound on ``tenant``'s busy lanes on ``device`` (see
+        ``_tenant_busy``)."""
+        return self._tenant_busy.get((device, tenant), 0)
+
     def _new_lane(self, device: int) -> Lane:
-        lane = Lane(self.lanes_created, device_id=device)
+        lane = Lane(self.lanes_created, device_id=device, manager=self)
         self.lanes[lane.lane_id] = lane
         self.lanes_created += 1
         return lane
@@ -267,12 +327,18 @@ class StreamManager:
                 # A lane counts toward the quota while ANY of the tenant's
                 # work is queued on it (not just the latest assignee — a
                 # shared lane must not silently drop out of the count).
-                own = [l for l in self.device_lanes(device)
-                       if not l.reserved and l.pending(is_done) > 0
-                       and l.serves(element.tenant)]
-                if len(own) >= max(1, quota):
-                    self.quota_fallbacks += 1
-                    return self._fallback_lane(own, element, is_done)
+                # The incremental busy-lane count is an upper bound, so
+                # ``count < quota`` skips the per-lane pruning scan entirely
+                # (provably the same decision); only at/over quota do we pay
+                # for the precise scan.
+                if (self.busy_lanes(device, element.tenant)
+                        >= max(1, quota)):
+                    own = [l for l in self.device_lanes(device)
+                           if not l.reserved and l.pending(is_done) > 0
+                           and l.serves(element.tenant)]
+                    if len(own) >= max(1, quota):
+                        self.quota_fallbacks += 1
+                        return self._fallback_lane(own, element, is_done)
         free = self._free.setdefault(device, deque())
         if self.new_stream_policy is NewStreamPolicy.FIFO_REUSE:
             # Reclaim lanes whose queues drained (FIFO order, §IV-C).
@@ -306,21 +372,35 @@ class StreamManager:
         are only chosen when every alternative is equally blocked; ties break
         by shortest queue.  This is what keeps a latency-critical element
         from parking behind a bulk tenant's queue under ``max_lanes``
-        saturation."""
+        saturation.
+
+        EDF-aware: a lane whose queue holds only *later-deadline* (or
+        deadline-free) work would likewise delay a deadline'd element past
+        its EDF rank, so such lanes sort after lanes already serving an
+        equal-or-earlier deadline.  For deadline-free elements the EDF term
+        is vacuously False everywhere (``inf < x`` never holds), preserving
+        today's ordering bit-for-bit."""
         prio = element.priority if element is not None else 0
+        edl = (element.effective_deadline if element is not None
+               else float("inf"))
 
         def key(lane: Lane):
             n = lane.pending(is_done)       # prunes finished elements first
             mp = lane.min_priority()
             blocked = mp is not None and mp < prio
-            return (blocked, n, lane.lane_id)
+            edf_blocked = n > 0 and edl < lane.min_deadline()
+            return (blocked, edf_blocked, n, lane.lane_id)
 
-        ranked = sorted(lanes, key=key)
-        best = ranked[0]
+        keyed = sorted(((key(lane), lane) for lane in lanes),
+                       key=lambda kl: kl[0])
+        best_key, best = keyed[0]
         bmp = best.min_priority()
         if any(l.min_priority() is not None and l.min_priority() < prio
                for l in lanes) and not (bmp is not None and bmp < prio):
             self.priority_bypasses += 1
+        if (edl != float("inf") and not best_key[1]
+                and any(k[1] for k, _ in keyed[1:])):
+            self.edf_bypasses += 1
         return best
 
     # ------------------------------------------------------------------
@@ -365,7 +445,7 @@ class StreamManager:
 
         element.stream = lane.lane_id
         element.device = lane.device_id
-        lane.in_flight.append(element)
+        lane.add(element)
         lane.last = element
 
         # Events: every unfinished parent on a *different* lane.  Same-lane
@@ -443,7 +523,7 @@ class StreamManager:
         skipping placement and the assignment algorithm entirely."""
         element.stream = lane.lane_id
         element.device = lane.device_id
-        lane.in_flight.append(element)
+        lane.add(element)
         lane.last = element
 
     # ------------------------------------------------------------------
@@ -454,6 +534,7 @@ class StreamManager:
             return
         if element in lane.in_flight:
             lane.in_flight.remove(element)
+            lane._note_remove(element)
         if not lane.in_flight and lane.last is not None and not lane.last.active:
             # A drained lane's retired tail can never be inherited again,
             # but through parents/children lists it would pin the whole
@@ -471,6 +552,8 @@ class StreamManager:
                "events_created": self.events_created}
         if self.priority_bypasses:
             out["priority_bypasses"] = self.priority_bypasses
+        if self.edf_bypasses:
+            out["edf_bypasses"] = self.edf_bypasses
         if self.tenant_quotas:
             out["quota_fallbacks"] = self.quota_fallbacks
         if self._plan_lanes:

@@ -79,7 +79,8 @@ class SubmissionPipeline:
         # come back regardless of ``auto_prefetch``: the fault-driven
         # single-device mode can read a *host-valid* array in place, but a
         # tier payload is not host-addressable until its RELOAD runs.
-        self.reload(e.args, e.device, priority=e.priority, tenant=e.tenant)
+        self.reload(e.args, e.device, priority=e.priority, tenant=e.tenant,
+                    deadline_s=e.deadline_s, deadline_t=e.deadline_t)
         # Host-resident read args must reach the device ahead of the kernel.
         # With auto_prefetch off on a single device the executor reads the
         # host copy in place (GrCUDA's fault-driven mode), but on multiple
@@ -88,10 +89,12 @@ class SubmissionPipeline:
         # upload is forced regardless of the flag.
         if sched.auto_prefetch or sched.num_devices > 1:
             self.prefetch(e.args, e.device, priority=e.priority,
-                          tenant=e.tenant)
+                          tenant=e.tenant, deadline_s=e.deadline_s,
+                          deadline_t=e.deadline_t)
         if sched.num_devices > 1:
             self.migrate(e.args, e.device, priority=e.priority,
-                         tenant=e.tenant)
+                         tenant=e.tenant, deadline_s=e.deadline_s,
+                         deadline_t=e.deadline_t)
         self.schedule(e)
 
     def reserve(self, e: ComputationalElement,
@@ -115,7 +118,8 @@ class SubmissionPipeline:
             return
         for ma in mem.reserve(e.device, e, sched.dag.has_device_frontier,
                               extra_pinned):
-            self.evict(ma, priority=e.priority, tenant=e.tenant)
+            self.evict(ma, priority=e.priority, tenant=e.tenant,
+                       deadline_s=e.deadline_s, deadline_t=e.deadline_t)
 
     def reserve_plan(self, plan, extra_pinned: Optional[Iterable[int]] = None
                      ) -> None:
@@ -138,7 +142,9 @@ class SubmissionPipeline:
                 self.evict(ma)
 
     def evict(self, ma, *, priority: int = 0,
-              tenant: str = DEFAULT_TENANT) -> ComputationalElement:
+              tenant: str = DEFAULT_TENANT,
+              deadline_s: Optional[float] = None,
+              deadline_t: Optional[float] = None) -> ComputationalElement:
         """Synthesize and schedule one EVICT element for ``ma``.
 
         ``inout`` access makes the DAG order it after every in-flight
@@ -163,7 +169,8 @@ class SubmissionPipeline:
                 fn=None, args=(inout(ma),), kind=ElementKind.EVICT,
                 name=f"evict_{ma.name}",
                 transfer_bytes=ma.nbytes if dirty else 0,
-                config={"writeback": dirty}, priority=priority, tenant=tenant)
+                config={"writeback": dirty}, priority=priority, tenant=tenant,
+                deadline_s=deadline_s, deadline_t=deadline_t)
             t.device = ma.device_id if ma.device_id is not None else 0
             if sched.policy == "parallel":
                 self.schedule(t)
@@ -178,7 +185,8 @@ class SubmissionPipeline:
             fn=None, args=(inout(ma),), kind=ElementKind.EVICT,
             name=f"evict_{ma.name}", transfer_bytes=wire,
             config=dict({"writeback": True}, **plan.get("config", {})),
-            priority=priority, tenant=tenant)
+            priority=priority, tenant=tenant,
+            deadline_s=deadline_s, deadline_t=deadline_t)
         t.tier = tier
         if tier.location == "device":
             t.device = target       # runs on the (src -> target) D2D link
@@ -194,7 +202,9 @@ class SubmissionPipeline:
         return t
 
     def reload(self, args: Sequence[Arg], device: int, *,
-               priority: int = 0, tenant: str = DEFAULT_TENANT) -> None:
+               priority: int = 0, tenant: str = DEFAULT_TENANT,
+               deadline_s: Optional[float] = None,
+               deadline_t: Optional[float] = None) -> None:
         """Insert RELOAD elements for read args parked in a host-side tier
         (``ma.backing_tier`` set).  The tier handler restores the host
         payload and the H2D engine uploads it; the DAG orders the RELOAD
@@ -218,7 +228,8 @@ class SubmissionPipeline:
                 fn=None, args=(inout(ma),), kind=ElementKind.RELOAD,
                 name=f"reload_{ma.name}",
                 transfer_bytes=tier.reload_wire_bytes(ma),
-                config=cfg, priority=priority, tenant=tenant)
+                config=cfg, priority=priority, tenant=tenant,
+                deadline_s=deadline_s, deadline_t=deadline_t)
             t.tier = tier
             t.device = device
             if sched.policy == "parallel":
@@ -228,12 +239,14 @@ class SubmissionPipeline:
             sched.memory.note_reload(ma, device)
 
     def prefetch(self, args: Sequence[Arg], device: int = 0, *,
-                 priority: int = 0, tenant: str = DEFAULT_TENANT) -> None:
+                 priority: int = 0, tenant: str = DEFAULT_TENANT,
+                 deadline_s: Optional[float] = None,
+                 deadline_t: Optional[float] = None) -> None:
         """Insert asynchronous H2D transfers for host-resident read args.
 
-        The transfers inherit the consuming kernel's priority/tenant: a
-        latency-critical kernel's input upload must not be accounted (or
-        de-prioritized) as someone else's work."""
+        The transfers inherit the consuming kernel's priority/tenant (and
+        deadline): a latency-critical kernel's input upload must not be
+        accounted (or de-prioritized) as someone else's work."""
         sched = self.sched
         for a in args:
             ma = a.array
@@ -241,7 +254,8 @@ class SubmissionPipeline:
                 t = ComputationalElement(
                     fn=None, args=(inout(ma),), kind=ElementKind.TRANSFER,
                     name=f"h2d_{ma.name}", transfer_bytes=ma.nbytes,
-                    priority=priority, tenant=tenant)
+                    priority=priority, tenant=tenant,
+                    deadline_s=deadline_s, deadline_t=deadline_t)
                 t.device = device
                 if sched.policy == "parallel":
                     self.schedule(t)
@@ -252,7 +266,9 @@ class SubmissionPipeline:
                 sched.memory.note_h2d(ma, device)
 
     def migrate(self, args: Sequence[Arg], device: int, *,
-                priority: int = 0, tenant: str = DEFAULT_TENANT) -> None:
+                priority: int = 0, tenant: str = DEFAULT_TENANT,
+                deadline_s: Optional[float] = None,
+                deadline_t: Optional[float] = None) -> None:
         """Move device-resident read args owned by *other* devices onto
         ``device`` via D2D transfer elements (single-copy ownership model:
         the copy migrates, it is not replicated)."""
@@ -270,7 +286,8 @@ class SubmissionPipeline:
             t = ComputationalElement(
                 fn=None, args=(inout(ma),), kind=ElementKind.D2D,
                 name=f"d2d_{ma.name}", transfer_bytes=getattr(ma, "nbytes", 0),
-                priority=priority, tenant=tenant)
+                priority=priority, tenant=tenant,
+                deadline_s=deadline_s, deadline_t=deadline_t)
             t.device = device
             t.src_device = src
             self.schedule(t)
@@ -280,12 +297,18 @@ class SubmissionPipeline:
     def schedule(self, e: ComputationalElement) -> None:
         """DAG insert + lane assignment + submission (parallel policy)."""
         sched = self.sched
+        # Idempotent deadline stamp: kernels arrive tagged from _launch,
+        # auto children carry inherited deadline_t; both still register
+        # with the monitor here (direct schedule() callers get stamped).
+        sched.deadlines.tag(e)
         sched.executor.host_overhead(sched.launch_overhead_s)
         sched.dag.add(e)
         lane, events = sched.streams.assign(e, sched.executor.is_done)
         sched.executor.submit(e, lane.lane_id, events)
         sched._elements.append(e)
         self.submissions += 1
+        # Submission-time deadline-risk check (may preempt queued bulk work).
+        sched.deadlines.on_submit(e)
         if sched._capture is not None:
             sched._capture.trace(e)
 

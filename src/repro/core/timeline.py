@@ -28,6 +28,8 @@ class Span:
     priority: int = 0
     t_issue: float = float("nan")      # submission time; t0 - t_issue is the
     #                                    span's queueing delay
+    deadline: Optional[float] = None   # absolute deadline (None = no SLO);
+    #                                    met iff t1 <= deadline
 
     @property
     def dur(self) -> float:
@@ -40,6 +42,13 @@ class Span:
     @property
     def latency(self) -> float:
         return self.t1 - self.t_issue   # submit-to-completion (nan likewise)
+
+    @property
+    def met_deadline(self) -> Optional[bool]:
+        """True/False for deadline'd spans, None for deadline-free ones."""
+        if self.deadline is None:
+            return None
+        return self.t1 <= self.deadline + 1e-12
 
 
 def _union(intervals: Iterable[Tuple[float, float]]) -> List[Tuple[float, float]]:
@@ -72,15 +81,19 @@ def _intersect(xs: List[Tuple[float, float]], ys: List[Tuple[float, float]]
     return out
 
 
-def _percentile(xs: List[float], q: float) -> float:
-    """Linear-interpolated percentile of ``xs`` (q in [0, 1])."""
-    if not xs:
+def _sorted_percentile(ys: List[float], q: float) -> float:
+    """Linear-interpolated percentile of an already-sorted ``ys``."""
+    if not ys:
         return 0.0
-    ys = sorted(xs)
     k = (len(ys) - 1) * q
     lo = int(k)
     hi = min(lo + 1, len(ys) - 1)
     return ys[lo] + (ys[hi] - ys[lo]) * (k - lo)
+
+
+def _percentile(xs: List[float], q: float) -> float:
+    """Linear-interpolated percentile of ``xs`` (q in [0, 1])."""
+    return _sorted_percentile(sorted(xs), q)
 
 
 def _k_overlap(spans: List[Tuple[float, float]], k: int = 2
@@ -106,13 +119,27 @@ def _k_overlap(spans: List[Tuple[float, float]], k: int = 2
 @dataclass
 class Timeline:
     spans: List[Span] = field(default_factory=list)
+    # Per-tenant append-only buffers of device spans, filled by record():
+    # tenant_stats() reads these instead of rescanning (and re-sorting) the
+    # full span list on every call.  ``_tenant_cache`` memoizes one stats
+    # epoch per tenant — keyed by buffer length, so stats are recomputed
+    # (and the percentile arrays re-sorted) at most once per query epoch,
+    # however often serving polls per flush.
+    _per_tenant: Dict[str, List[Span]] = field(default_factory=dict)
+    _tenant_cache: Dict[str, tuple] = field(default_factory=dict)
+
+    _DEVICE_KINDS = ("compute", "h2d", "d2h", "d2d")
 
     def record(self, uid: int, name: str, kind: str, lane: Optional[int],
                t0: float, t1: float, *, tenant: Optional[str] = None,
-               priority: int = 0, t_issue: float = float("nan")) -> None:
-        self.spans.append(Span(uid, name, kind, lane, t0, t1,
-                               tenant=tenant, priority=priority,
-                               t_issue=t_issue))
+               priority: int = 0, t_issue: float = float("nan"),
+               deadline: Optional[float] = None) -> None:
+        s = Span(uid, name, kind, lane, t0, t1,
+                 tenant=tenant, priority=priority,
+                 t_issue=t_issue, deadline=deadline)
+        self.spans.append(s)
+        if tenant is not None and kind in self._DEVICE_KINDS:
+            self._per_tenant.setdefault(tenant, []).append(s)
 
     # ------------------------------------------------------------------
     def device_spans(self) -> List[Span]:
@@ -147,26 +174,49 @@ class Timeline:
         For each tenant that appears on the timeline: element count,
         makespan (first start to last end of its spans), device-busy time,
         mean/p99 queueing delay (span start minus submission) and p50/p99
-        submit-to-completion latency.  Spans recorded without a tenant tag
-        (host spans, pre-QoS callers) are excluded."""
-        per: Dict[str, List[Span]] = {}
-        for s in self.device_spans():
-            if s.tenant is not None:
-                per.setdefault(s.tenant, []).append(s)
+        submit-to-completion latency.  Tenants with deadline'd spans
+        additionally report ``deadlined`` (count of deadline'd compute
+        launches) and ``slo_attainment`` (fraction that finished by their
+        deadline).  Spans recorded without a tenant tag (host spans,
+        pre-QoS callers) are excluded.
+
+        Incremental: spans accumulate in per-tenant append-only buffers and
+        the percentile arrays are extended + re-sorted once per query epoch
+        (timsort is near-linear on the mostly-sorted extension); repeated
+        queries with no new spans return the cached epoch."""
         out: Dict[str, Dict[str, float]] = {}
-        for tenant, spans in per.items():
-            lats = [s.latency for s in spans if s.latency == s.latency]
-            qds = [s.queue_delay for s in spans
-                   if s.queue_delay == s.queue_delay]
-            out[tenant] = {
+        for tenant, spans in self._per_tenant.items():
+            cached = self._tenant_cache.get(tenant)
+            if cached is not None and cached[0] == len(spans):
+                out[tenant] = dict(cached[1])
+                continue
+            n0, _, lats, qds = cached if cached is not None else (0, None, [], [])
+            fresh = spans[n0:]
+            lats = lats + [s.latency for s in fresh if s.latency == s.latency]
+            qds = qds + [s.queue_delay for s in fresh
+                         if s.queue_delay == s.queue_delay]
+            lats.sort()
+            qds.sort()
+            stats = {
                 "elements": float(len(spans)),
                 "makespan_s": max(s.t1 for s in spans) - min(s.t0 for s in spans),
                 "busy_s": _measure(_union([(s.t0, s.t1) for s in spans])),
                 "queue_delay_mean_s": (sum(qds) / len(qds)) if qds else 0.0,
-                "queue_delay_p99_s": _percentile(qds, 0.99),
-                "latency_p50_s": _percentile(lats, 0.50),
-                "latency_p99_s": _percentile(lats, 0.99),
+                "queue_delay_p99_s": _sorted_percentile(qds, 0.99),
+                "latency_p50_s": _sorted_percentile(lats, 0.50),
+                "latency_p99_s": _sorted_percentile(lats, 0.99),
             }
+            # SLO attainment over deadline'd *compute* spans only: inherited
+            # transfer children carry the same deadline and would otherwise
+            # triple-count each launch.
+            ded = [s for s in spans
+                   if s.deadline is not None and s.kind == "compute"]
+            if ded:
+                met = sum(1 for s in ded if s.met_deadline)
+                stats["deadlined"] = float(len(ded))
+                stats["slo_attainment"] = met / len(ded)
+            self._tenant_cache[tenant] = (len(spans), stats, lats, qds)
+            out[tenant] = dict(stats)
         return out
 
     def busy_time(self, kind: str) -> float:

@@ -7,13 +7,19 @@ batches land on separate scheduler lanes and overlap (the paper's
 space-sharing applied to inference), while the shared read-only weights are
 tracked as a const dependency — exactly the two-branch pattern of Fig. 2.
 
-Multi-tenant QoS: ``submit(..., tenant=, priority=)`` tags each request.
-Batches are assembled per (shape, tenant, priority) and issued in
+Multi-tenant QoS: ``submit(..., tenant=, priority=, deadline_s=)`` tags each
+request.  Batches are assembled per (shape, tenant, priority) and issued in
 **weighted-fair** order (stride scheduling — each tenant's virtual time
 advances by 1/weight per batch), and the underlying launches carry the tags
 so the scheduler's priority-weighted space-sharing and per-tenant stats see
-them.  ``submit`` and ``flush`` are thread-safe via the scheduler's
-submission pipeline lock.
+them.  Deadline'd requests add **EDF batch assembly**: each tenant's ready
+batches order earliest-deadline-first, and while any tenant's head batch
+carries a deadline the earliest one issues ahead of the stride order (the
+stride clock still charges it, so fairness debt is preserved).  A
+``max_batch_wait_s`` bound holds under-full batches back for late arrivals
+instead of issuing fragments, flushing them once the oldest member ages out
+(or its deadline draws near).  ``submit`` and ``flush`` are thread-safe via
+the scheduler's submission pipeline lock.
 
 Per-slot ragged positions (token-level continuous batching) would need a
 vector-``pos`` decode mask; noted as future work in DESIGN.md.
@@ -45,17 +51,31 @@ class Request:
     new_tokens: int
     tenant: str = DEFAULT_TENANT
     priority: int = 0
+    deadline_s: Optional[float] = None   # per-request latency SLO (relative)
+    t_submit: float = 0.0                # host clock at submit()
     result: Optional[np.ndarray] = None
+
+    @property
+    def deadline_t(self) -> float:
+        """Absolute deadline (+inf when the request has none)."""
+        if self.deadline_s is None:
+            return float("inf")
+        return self.t_submit + self.deadline_s
 
 
 class ServingEngine:
     def __init__(self, cfg: ArchConfig, params, *, batch_size: int = 2,
                  max_new_tokens: int = 16,
                  scheduler: Optional[GrScheduler] = None,
-                 capture: bool = True) -> None:
+                 capture: bool = True,
+                 max_batch_wait_s: Optional[float] = None) -> None:
         self.cfg = cfg
         self.batch = batch_size
         self.max_new = max_new_tokens
+        # Age bound for under-full batches: flush() holds a partial batch
+        # back (for late same-shape arrivals) until its oldest member has
+        # waited this long.  None = issue partials immediately (legacy).
+        self.max_batch_wait_s = max_batch_wait_s
         self.sched = scheduler or make_scheduler("parallel")
         # Steady-state batches of one shape repeat the identical episode;
         # capture/replay amortizes DAG inference + lane assignment across
@@ -75,13 +95,19 @@ class ServingEngine:
 
     # ------------------------------------------------------------------
     def submit(self, tokens: np.ndarray, new_tokens: int = 0, *,
-               tenant: str = DEFAULT_TENANT, priority: int = 0) -> Request:
+               tenant: str = DEFAULT_TENANT, priority: int = 0,
+               deadline_s: Optional[float] = None) -> Request:
         """Queue one request.  ``tenant``/``priority`` drive weighted-fair
-        batch assembly and the scheduler's space-sharing weights."""
+        batch assembly and the scheduler's space-sharing weights;
+        ``deadline_s`` (seconds from now) makes the request's batch EDF-rank
+        ahead of deadline-free work and carries into the scheduler's
+        deadline-aware execution."""
         with self.sched.pipeline:
             req = Request(self._rid, np.asarray(tokens, np.int32),
                           new_tokens or self.max_new,
-                          tenant=tenant, priority=priority)
+                          tenant=tenant, priority=priority,
+                          deadline_s=deadline_s,
+                          t_submit=self.sched.executor.host_now())
             self._rid += 1
             self._queue.append(req)
             return req
@@ -118,7 +144,7 @@ class ServingEngine:
         self._fns[key] = gf
         return gf
 
-    def flush(self) -> None:
+    def flush(self, force: bool = False) -> None:
         """Assemble queued requests into fixed-shape batches and issue them
         through the scheduler (each batch = one lane-schedulable element).
 
@@ -126,8 +152,19 @@ class ServingEngine:
         weighted-fair order: the tenant with the smallest virtual time goes
         next, and issuing one batch advances its clock by ``1/weight`` —
         priority-3 tenants therefore issue 8 batches for every priority-0
-        batch while both have work queued, yet nobody starves."""
+        batch while both have work queued, yet nobody starves.
+
+        Deadline'd requests rank their batch earliest-deadline-first within
+        the tenant, and an urgent head batch (finite deadline) issues ahead
+        of the stride order; deadline-free flushes are bit-identical to the
+        stride-only engine.  With ``max_batch_wait_s`` set, an under-full
+        batch is *held* (requeued) until its oldest request has waited that
+        long or a member's deadline is within the wait bound — late
+        same-shape arrivals then fill it instead of padding.  ``force=True``
+        issues everything regardless of age (drain/shutdown path)."""
         with self.sched.pipeline:
+            wait = getattr(self, "max_batch_wait_s", None)
+            now = self.sched.executor.host_now()
             by_key: Dict[tuple, List[Request]] = collections.defaultdict(list)
             while self._queue:
                 r = self._queue.popleft()
@@ -138,13 +175,33 @@ class ServingEngine:
             # priority-0 batch; the stride charge below then uses the right
             # weight) with shape as a deterministic tie-break.
             ready: Dict[str, collections.deque] = {}
+            held: List[Request] = []
             for (plen, ntok, tenant, prio), reqs in sorted(
                     by_key.items(), key=lambda kv: (-kv[0][3], kv[0][:2])):
+                # Stable deadline sort: urgent requests pack into the first
+                # batch of their shape; deadline-free requests (all +inf)
+                # keep FIFO arrival order.
+                reqs.sort(key=lambda r: r.deadline_t)
                 for i in range(0, len(reqs), self.batch):
+                    group = reqs[i:i + self.batch]
+                    edl = min(r.deadline_t for r in group)
+                    if (wait is not None and not force
+                            and len(group) < self.batch
+                            and now - min(r.t_submit for r in group) < wait
+                            and edl - now > wait):
+                        held.extend(group)
+                        continue
                     ready.setdefault(tenant, collections.deque()).append(
-                        (plen, ntok, prio, reqs[i:i + self.batch]))
+                        (edl, plen, ntok, prio, group))
+            if held:
+                self._queue.extendleft(reversed(held))
             if not ready:
                 return
+            # Within each tenant: earliest deadline first.  Stable, and all
+            # deadline-free batches key at +inf, so a deadline-free flush
+            # preserves the (-priority, shape) order built above exactly.
+            ready = {t: collections.deque(sorted(dq, key=lambda b: b[0]))
+                     for t, dq in ready.items()}
             # Stride scheduling over this flush's tenants.  Virtual time is
             # per-flush: every flush drains the whole queue, so there is no
             # standing backlog for cross-flush debt to arbitrate — and a
@@ -152,9 +209,15 @@ class ServingEngine:
             # to a stale minimum and claim an unbounded burst.
             vt = {t: 0.0 for t in ready}
             while any(ready.values()):
-                tenant = min((t for t in ready if ready[t]),
-                             key=lambda t: (vt[t], t))
-                plen, ntok, prio, group = ready[tenant].popleft()
+                live = [t for t in ready if ready[t]]
+                # EDF across tenant heads while any head is deadline'd; the
+                # stride clock below still charges the issue, so the
+                # weighted-fair debt is settled once deadlines drain.
+                if min(ready[t][0][0] for t in live) < float("inf"):
+                    tenant = min(live, key=lambda t: (ready[t][0][0], t))
+                else:
+                    tenant = min(live, key=lambda t: (vt[t], t))
+                _, plen, ntok, prio, group = ready[tenant].popleft()
                 vt[tenant] += 1.0 / priority_weight(prio)
                 self._issue_batch(plen, ntok, tenant, prio, group)
 
@@ -171,8 +234,16 @@ class ServingEngine:
             name=f"gen_{group[0].rid}")
         # Priority/tenant are call-scoped options and part of the plan
         # signature, so tenants never share a plan's weighting.
-        gf = self._batch_fn(plen, ntok).with_options(priority=prio,
-                                                     tenant=tenant)
+        opts = dict(priority=prio, tenant=tenant)
+        dls = [r.deadline_s for r in group if r.deadline_s is not None]
+        if dls:
+            # The *declared* (relative) window, not the remaining slack:
+            # deadline_s is part of the capture-plan signature, so a stable
+            # value is what lets steady-state deadline'd batches keep
+            # replaying one plan.  The absolute deadline_t is stamped at
+            # launch, i.e. the window restarts at issue time.
+            opts["deadline_s"] = min(dls)
+        gf = self._batch_fn(plen, ntok).with_options(**opts)
         ctx = (self.sched.capture(gf.name) if self.capture
                else contextlib.nullcontext())
         with ctx:
