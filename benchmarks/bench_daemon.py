@@ -1,0 +1,220 @@
+"""Runtime-daemon benchmark: IPC submission overhead + admission control
+under an open-loop spike-and-cooldown arrival scenario.
+
+Three measurements, each with fail-fast gates (``BENCH_daemon.json``):
+
+* **ipc** — identical warmed ``chain`` jobs executed in-process
+  (``run_job`` on a local scheduler) vs through the daemon socket
+  (submit + wait round trips, lifecycle journaling, admission sampling).
+  Gate: daemon wall time per job <= 2x in-process (3x in smoke — tiny jobs
+  amortize less).
+
+* **spike** — open-loop arrivals: a calm trickle, then burst waves faster
+  than the single worker drains.  The monitor's depth/rate detectors open a
+  cooldown window and the policy sheds low-priority work and defers
+  dispatch.  Gates: sheds > 0, defer events > 0, >=1 spike detected, and
+  every shed journaled with a ``shed:`` reason.
+
+* **calm control** — the same daemon configuration fed only the trickle:
+  zero sheds, 100% admission.  (Admission control that sheds without a
+  spike is just broken admission.)
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+
+from repro.core import make_scheduler
+from repro.daemon import (AdmissionPolicy, DaemonClient, DaemonServer,
+                          RuntimeMonitor)
+from repro.daemon.jobs import run_job
+from repro.daemon.lifecycle import JobState, validate_history
+
+from .common import emit
+
+
+def _percentile(xs, q):
+    ys = sorted(xs)
+    if not ys:
+        return 0.0
+    k = (len(ys) - 1) * q
+    lo = int(k)
+    hi = min(lo + 1, len(ys) - 1)
+    return ys[lo] + (ys[hi] - ys[lo]) * (k - lo)
+
+
+# ----------------------------------------------------------------------
+def bench_ipc_overhead(smoke: bool) -> dict:
+    jobs = 8 if smoke else 20
+    params = {"n": 4 if smoke else 8,
+              "size": 2048 if smoke else 65536, "digest": True}
+
+    # In-process reference: same handler, same scheduler machinery, no
+    # socket / journal / lifecycle.  Warm jit first on both paths' shapes.
+    sched = make_scheduler("parallel")
+    run_job(sched, "chain", dict(params, seed=999))
+    t0 = time.perf_counter()
+    for i in range(jobs):
+        run_job(sched, "chain", dict(params, seed=i))
+    in_proc_s = (time.perf_counter() - t0) / jobs
+    sched.close()
+
+    # Daemon path: in-process server (same interpreter => same warm jit
+    # cache), persistent client connection, full submit->wait round trip.
+    tmp = tempfile.mkdtemp(prefix="bench_daemon_")
+    srv = DaemonServer(os.path.join(tmp, "d.sock"),
+                       store_path=os.path.join(tmp, "jobs.jsonl"),
+                       workers=1, monitor_interval_s=0.05).start()
+    try:
+        with DaemonClient(srv.socket_path) as c:
+            c.result(c.submit("chain",
+                              dict(params, seed=999))["job_id"],
+                     timeout=300)          # warm the daemon's scheduler
+            t0 = time.perf_counter()
+            for i in range(jobs):
+                jid = c.submit("chain", dict(params, seed=i))["job_id"]
+                c.result(jid, timeout=300)
+            daemon_s = (time.perf_counter() - t0) / jobs
+    finally:
+        srv.stop()
+    return {"jobs": jobs, "in_process_us": in_proc_s * 1e6,
+            "daemon_us": daemon_s * 1e6, "ratio": daemon_s / in_proc_s}
+
+
+# ----------------------------------------------------------------------
+def _spike_daemon(tmp: str) -> DaemonServer:
+    return DaemonServer(
+        os.path.join(tmp, "d.sock"),
+        store_path=os.path.join(tmp, "jobs.jsonl"),
+        sched_kw={"simulate": True}, workers=1,
+        policy=AdmissionPolicy(max_queue_depth=24, spike_shed_depth=4,
+                               shed_below_priority=1, max_running=1,
+                               defer_backoff_s=0.01),
+        monitor=RuntimeMonitor(interval_s=0.02, spike_factor=3.0,
+                               spike_floor=2.0, rate_floor=50.0,
+                               cooldown_s=1.0),
+        monitor_interval_s=0.02).start()
+
+
+def _drive(c: DaemonClient, *, trickle: int, waves: int, wave_size: int,
+           service_s: float) -> dict:
+    """Open-loop arrival schedule; returns per-phase submit outcomes."""
+    calm, stormy = [], []
+    for _ in range(trickle):               # calm: slower than service rate
+        calm.append(c.submit("sleep", {"total_s": service_s, "steps": 2}))
+        time.sleep(service_s * 1.5)
+    for _ in range(waves):                 # storm: bursts faster than drain
+        for _ in range(wave_size):
+            stormy.append(c.submit("sleep", {"total_s": service_s,
+                                             "steps": 2}))
+        time.sleep(0.08)                   # a beat: the monitor sees depth
+    return {"calm": calm, "stormy": stormy}
+
+
+def bench_admission(smoke: bool) -> dict:
+    service_s = 0.02
+    waves, wave_size = (2, 8) if smoke else (4, 12)
+
+    # Spike run: trickle then burst waves.
+    tmp = tempfile.mkdtemp(prefix="bench_daemon_spike_")
+    srv = _spike_daemon(tmp)
+    try:
+        with DaemonClient(srv.socket_path) as c:
+            phases = _drive(c, trickle=4, waves=waves, wave_size=wave_size,
+                            service_s=service_s)
+            srv.wait_idle(timeout=120)
+            pol, mon = srv.policy.stats(), srv.monitor.stats()
+            jobs = srv.store.jobs()
+    finally:
+        srv.stop()
+    admitted_ids = {r["job_id"] for r in phases["stormy"] if r.get("ok")}
+    sheds = [r for r in phases["stormy"] if r.get("shed")]
+    lat = [j.transitions[-1][2] - j.submit_t for j in jobs
+           if j.job_id in admitted_ids and j.state is JobState.FINISHED]
+    bad_histories = [p for j in jobs for p in validate_history(j.transitions)]
+    spike = {
+        "submitted": len(phases["calm"]) + len(phases["stormy"]),
+        "calm_admitted": sum(bool(r.get("ok")) for r in phases["calm"]),
+        "storm_admitted": len(admitted_ids),
+        "shed": len(sheds),
+        "shed_rate": len(sheds) / max(1, len(phases["stormy"])),
+        "defer_events": pol["policy_defer_events"],
+        "monitor_spikes": mon["monitor_spikes"],
+        "p99_latency_s": _percentile(lat, 0.99),
+        "p50_latency_s": _percentile(lat, 0.50),
+        "bad_histories": bad_histories,
+        "shed_reasons_ok": all(r.get("reason", "").startswith("shed:")
+                               for r in sheds),
+    }
+
+    # Calm control: same configuration, trickle only.
+    tmp2 = tempfile.mkdtemp(prefix="bench_daemon_calm_")
+    srv2 = _spike_daemon(tmp2)
+    try:
+        with DaemonClient(srv2.socket_path) as c:
+            outcomes = []
+            for _ in range(8 if smoke else 16):
+                outcomes.append(c.submit("sleep", {"total_s": service_s,
+                                                   "steps": 2}))
+                time.sleep(service_s * 1.5)
+            srv2.wait_idle(timeout=120)
+            pol2 = srv2.policy.stats()
+            finished = len(srv2.store.by_state(JobState.FINISHED))
+    finally:
+        srv2.stop()
+    calm = {"submitted": len(outcomes),
+            "admitted": sum(bool(r.get("ok")) for r in outcomes),
+            "shed": pol2["policy_shed"], "finished": finished}
+    return {"spike": spike, "calm": calm}
+
+
+# ----------------------------------------------------------------------
+def main(smoke: bool = False) -> list:
+    max_ratio = 3.0 if smoke else 2.0
+    ipc = bench_ipc_overhead(smoke)
+    adm = bench_admission(smoke)
+    spike, calm = adm["spike"], adm["calm"]
+    result = {"ipc": ipc, "spike": spike, "calm": calm,
+              "max_ipc_ratio": max_ratio}
+    rows = [
+        ("daemon/ipc", ipc["daemon_us"],
+         f"in_process_us={ipc['in_process_us']:.1f} "
+         f"ratio={ipc['ratio']:.2f} (gate <= {max_ratio}x)"),
+        ("daemon/spike", spike["p99_latency_s"] * 1e6,
+         f"shed={spike['shed']}/{spike['submitted']} "
+         f"shed_rate={spike['shed_rate']:.2f} "
+         f"defers={spike['defer_events']} "
+         f"spikes={spike['monitor_spikes']} "
+         f"p50_us={spike['p50_latency_s'] * 1e6:.0f}"),
+        ("daemon/calm", 0.0,
+         f"admitted={calm['admitted']}/{calm['submitted']} "
+         f"shed={calm['shed']}"),
+    ]
+    if not smoke:
+        with open("BENCH_daemon.json", "w") as f:
+            json.dump(result, f, indent=2, sort_keys=True)
+    emit(rows)
+    # Fail-fast gates: a daemon that is slow, blind or trigger-happy is a
+    # broken tentpole.
+    assert ipc["ratio"] <= max_ratio, (
+        f"daemon IPC overhead {ipc['ratio']:.2f}x > {max_ratio}x in-process")
+    assert spike["monitor_spikes"] >= 1, "overload never detected as a spike"
+    assert spike["shed"] > 0, "admission control never shed under overload"
+    assert spike["defer_events"] > 0, "dispatch never deferred in cooldown"
+    assert spike["shed_reasons_ok"], "shed without a shed: reason"
+    assert 0.0 < spike["shed_rate"] < 1.0, (
+        f"shed rate {spike['shed_rate']:.2f} must be partial, not all-or-none")
+    assert spike["p99_latency_s"] > 0.0, "no admitted storm job finished"
+    assert not spike["bad_histories"], spike["bad_histories"]
+    assert spike["calm_admitted"] == 4, "trickle phase must admit everything"
+    assert calm["shed"] == 0 and calm["admitted"] == calm["submitted"], (
+        f"calm control shed work: {calm}")
+    assert calm["finished"] == calm["submitted"]
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    main(smoke="--smoke" in sys.argv)

@@ -11,9 +11,10 @@ import traceback
 
 def main() -> None:
     from . import (bench_api_overhead, bench_capture, bench_contention,
-                   bench_hwmetrics, bench_memory, bench_multidevice,
-                   bench_multitenant, bench_oracle, bench_overlap,
-                   bench_planopt, bench_roofline, bench_slo, bench_speedup)
+                   bench_daemon, bench_hwmetrics, bench_memory,
+                   bench_multidevice, bench_multitenant, bench_oracle,
+                   bench_overlap, bench_planopt, bench_roofline, bench_slo,
+                   bench_speedup)
 
     suites = [
         ("API overhead: legacy vs GrFunction vs replay "
@@ -34,6 +35,8 @@ def main() -> None:
         ("Multi-tenant QoS (BENCH_multitenant.json)", bench_multitenant),
         ("Deadline/SLO: EDF + boundary preemption (BENCH_slo.json)",
          bench_slo),
+        ("Runtime daemon: IPC overhead + admission control "
+         "(BENCH_daemon.json)", bench_daemon),
     ]
     failed = []
     for title, mod in suites:

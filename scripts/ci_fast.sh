@@ -34,4 +34,9 @@ python -m benchmarks.bench_planopt --smoke
 # the makespan regresses >10%, or EDF/preemption never engaged.
 python -m benchmarks.bench_slo --smoke
 python -m pytest -q tests/test_slo.py
+# Runtime-daemon smoke: IPC overhead gate vs in-process execution plus the
+# spike-and-cooldown admission scenario (sheds under overload, admits 100%
+# when calm); the socket round-trip itself is covered by
+# tests/test_daemon.py::test_cli_socket_roundtrip_smoke in the sweep below.
+python -m benchmarks.bench_daemon --smoke
 exec python -m pytest -q -m "not slow" "$@"

@@ -325,11 +325,18 @@ class ThreadLaneExecutor(Executor):
         self._submitted.clear()
 
     def shutdown(self) -> None:
+        """Idempotent: stop every lane worker and *join* it.  Relying on
+        daemon-thread teardown leaked running workers into interpreter exit
+        (and kept spool-file finalizers from running deterministically);
+        after shutdown returns, no lane thread is alive."""
         if self.on_stall is not None:
             self.on_stall(None)   # resume paused work so workers can drain
-        for w in self._lanes.values():
-            w.q.put(None)
+        workers = list(self._lanes.values())
         self._lanes.clear()
+        for w in workers:
+            w.q.put(None)         # sentinel after any queued work: drain
+        for w in workers:
+            w.join(timeout=5.0)
 
 
 # ======================================================================

@@ -614,6 +614,27 @@ class MemoryManager:
             out["mem_tiers"] = {t.name: t.stats() for t in self.tiers}
         return out
 
+    def logical_resident_bytes(self) -> Dict[int, int]:
+        """Per-device bytes the *logical* ledger says are resident —
+        exactly what the pools account against their budgets."""
+        with self._lock:
+            return {p.device_id: p.resident_bytes for p in self.pools}
+
+    def physical_resident_bytes(self) -> Dict[int, int]:
+        """Per-device bytes *physically installed*: resident-tracked arrays
+        whose device value object actually exists.  On the real executor at
+        a quiescent point this must equal :meth:`logical_resident_bytes`
+        (the daemon monitor's drift check); the simulator installs no
+        physical values, and a mid-flight real run legitimately lags."""
+        out: Dict[int, int] = {p.device_id: 0 for p in self.pools}
+        with self._lock:
+            for k, (dev, ref) in self._where.items():
+                ma = ref() if callable(ref) else None
+                if ma is None or getattr(ma, "device", None) is None:
+                    continue
+                out[dev] = out.get(dev, 0) + _nbytes(ma)
+        return out
+
     def verify(self) -> List[str]:
         """Debug hook: reconcile logical residency (array location bits,
         tier membership) against the pool ledger.  Returns a list of

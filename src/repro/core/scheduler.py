@@ -109,6 +109,7 @@ class GrScheduler:
         self.deadlines.full_boundary_checks = not self.executor.concurrent_waits
         self.executor.on_boundary = self.deadlines.on_boundary
         self.executor.on_stall = self.deadlines.ensure_progress
+        self._closed = False
 
     # ------------------------------------------------------------------
     def array(self, data=None, *, shape=None, dtype=np.float32,
@@ -443,30 +444,58 @@ class GrScheduler:
         return self.executor.timeline
 
     def stats(self) -> dict:
-        return {"policy": self.policy,
-                "elements": self.dag.num_elements,
-                "edges": self.dag.num_edges,
-                "d2d_transfers": self.d2d_transfers,
-                **self.pipeline.stats(),
-                **self.streams.stats(),
-                **self.executor.history.stats(),
-                **self.plan_cache.stats(),
-                **self.memory.stats(),
-                **self.deadlines.stats()}
+        """One consistent counter snapshot, taken under the submission lock
+        so a concurrent submitter (or the daemon's monitor loop) never reads
+        torn values — e.g. an element counted in ``elements`` whose bytes
+        have not yet landed in ``mem_resident``."""
+        with self.pipeline:
+            return {"policy": self.policy,
+                    "elements": self.dag.num_elements,
+                    "edges": self.dag.num_edges,
+                    "d2d_transfers": self.d2d_transfers,
+                    **self.pipeline.stats(),
+                    **self.streams.stats(),
+                    **self.executor.history.stats(),
+                    **self.plan_cache.stats(),
+                    **self.memory.stats(),
+                    **self.deadlines.stats()}
 
     def tenant_stats(self) -> dict:
         """Per-tenant QoS metrics (makespan, queueing delay, completion
         latency p50/p99, and — for deadline'd tenants — SLO attainment)
-        computed from the execution timeline."""
-        return self.timeline.tenant_stats()
+        computed from the execution timeline.  Consistent under concurrent
+        launches: the pipeline lock serializes against submitters, the
+        timeline's own lock against lane workers recording completions."""
+        with self.pipeline:
+            return self.timeline.tenant_stats()
 
-    def shutdown(self) -> None:
+    # ------------------------------------------------------------------
+    def close(self) -> None:
+        """Idempotent full shutdown: resume paused work, drain every
+        in-flight computation, join the executor's worker threads, release
+        spill-tier backing resources (spool directories, compressed
+        payloads).  After close the scheduler must not be used."""
+        if self._closed:
+            return
+        self._closed = True
         # Paused (preempted) work must drain before workers are stopped.
         self.deadlines.resume_all()
+        try:
+            self.sync()
+        except Exception:
+            pass            # best effort: close from an except path anyway
         self.executor.shutdown()
-        # Release tier backing resources (spool directories, compressed
-        # payloads) — no leaked spool files after a scheduler is retired.
         self.memory.close()
+
+    def shutdown(self) -> None:
+        """Backward-compatible alias for :meth:`close`."""
+        self.close()
+
+    def __enter__(self) -> "GrScheduler":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
 
 # ----------------------------------------------------------------------

@@ -11,6 +11,7 @@ the timeline we compute the paper's four overlap metrics:
 """
 from __future__ import annotations
 
+import threading
 from dataclasses import dataclass, field
 from typing import Dict, Iterable, List, Optional, Tuple
 
@@ -127,6 +128,11 @@ class Timeline:
     # however often serving polls per flush.
     _per_tenant: Dict[str, List[Span]] = field(default_factory=dict)
     _tenant_cache: Dict[str, tuple] = field(default_factory=dict)
+    # Recorders (real-executor lane workers, host-span paths) and readers
+    # (tenant_stats, the daemon monitor) run on different threads and are
+    # NOT all under the scheduler's pipeline lock — a timeline-internal lock
+    # keeps each record and each stats pass internally consistent.
+    _lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
 
     _DEVICE_KINDS = ("compute", "h2d", "d2h", "d2d")
 
@@ -137,9 +143,20 @@ class Timeline:
         s = Span(uid, name, kind, lane, t0, t1,
                  tenant=tenant, priority=priority,
                  t_issue=t_issue, deadline=deadline)
-        self.spans.append(s)
-        if tenant is not None and kind in self._DEVICE_KINDS:
-            self._per_tenant.setdefault(tenant, []).append(s)
+        with self._lock:
+            self.spans.append(s)
+            if tenant is not None and kind in self._DEVICE_KINDS:
+                self._per_tenant.setdefault(tenant, []).append(s)
+
+    def device_busy_since(self, idx: int) -> Tuple[int, float]:
+        """Sum of device-span durations recorded at or after span index
+        ``idx``; returns ``(new_idx, busy_seconds)`` so callers (the daemon
+        monitor's utilization gauge) can walk the timeline incrementally."""
+        with self._lock:
+            n = len(self.spans)
+            busy = sum(s.dur for s in self.spans[idx:n]
+                       if s.kind in self._DEVICE_KINDS)
+        return n, busy
 
     # ------------------------------------------------------------------
     def device_spans(self) -> List[Span]:
@@ -183,7 +200,15 @@ class Timeline:
         Incremental: spans accumulate in per-tenant append-only buffers and
         the percentile arrays are extended + re-sorted once per query epoch
         (timsort is near-linear on the mostly-sorted extension); repeated
-        queries with no new spans return the cached epoch."""
+        queries with no new spans return the cached epoch.
+
+        Thread-safe: the whole pass runs under the timeline lock, so a
+        monitor polling stats never sees a tenant buffer mid-append (torn
+        counters) from a lane worker recording concurrently."""
+        with self._lock:
+            return self._tenant_stats_locked()
+
+    def _tenant_stats_locked(self) -> Dict[str, Dict[str, float]]:
         out: Dict[str, Dict[str, float]] = {}
         for tenant, spans in self._per_tenant.items():
             cached = self._tenant_cache.get(tenant)

@@ -1,0 +1,37 @@
+"""Runtime daemon — out-of-process job service over the GrJAX scheduler.
+
+Every frontend so far links :class:`~repro.core.scheduler.GrScheduler`
+in-process; a resident runtime that many client *processes* submit to needs
+a service boundary.  This package is that boundary:
+
+* :mod:`~repro.daemon.server` — a Unix-domain-socket server speaking
+  length-prefixed JSON, dispatching jobs onto one shared scheduler through
+  the thread-safe SubmissionPipeline;
+* :mod:`~repro.daemon.client` / :mod:`~repro.daemon.cli` — the client
+  library and the ``repro-daemon`` command line
+  (``serve | submit | status | wait | cancel | stats | drain | shutdown``);
+* :mod:`~repro.daemon.store` — an append-only JSONL journal: the job table
+  survives daemon restarts and QUEUED work is replayed exactly once;
+* :mod:`~repro.daemon.lifecycle` — the strict job state machine
+  (QUEUED -> ADMITTED -> RUNNING -> PAUSED -> FINISHED/FAILED/CANCELLED)
+  with an explicit legal-transition table and per-transition timestamps;
+* :mod:`~repro.daemon.monitor` / :mod:`~repro.daemon.policy` — an EWMA
+  monitoring loop (queue depth, lane utilization, memory occupancy, spike
+  detection with cooldown windows, logical-vs-physical residency drift)
+  driving admission control: jobs are shed or deferred under pressure
+  instead of admitted blindly.
+"""
+from .client import DaemonClient, DaemonError
+from .lifecycle import (IllegalTransitionError, JobRecord, JobState,
+                        LEGAL_TRANSITIONS, TERMINAL_STATES)
+from .monitor import Ewma, MonitorSnapshot, RuntimeMonitor, SpikeDetector
+from .policy import AdmissionPolicy, Decision
+from .server import DaemonServer
+from .store import JobStore
+
+__all__ = [
+    "AdmissionPolicy", "DaemonClient", "DaemonError", "DaemonServer",
+    "Decision", "Ewma", "IllegalTransitionError", "JobRecord", "JobState",
+    "JobStore", "LEGAL_TRANSITIONS", "MonitorSnapshot", "RuntimeMonitor",
+    "SpikeDetector", "TERMINAL_STATES",
+]

@@ -1,0 +1,5 @@
+"""``python -m repro.daemon`` -> the repro-daemon CLI."""
+from .cli import main
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -76,6 +76,7 @@ class ServingEngine:
         # back (for late same-shape arrivals) until its oldest member has
         # waited this long.  None = issue partials immediately (legacy).
         self.max_batch_wait_s = max_batch_wait_s
+        self._owns_sched = scheduler is None
         self.sched = scheduler or make_scheduler("parallel")
         # Steady-state batches of one shape repeat the identical episode;
         # capture/replay amortizes DAG inference + lane assignment across
@@ -268,3 +269,30 @@ class ServingEngine:
     def tenant_stats(self) -> dict:
         """Per-tenant QoS (makespan, queueing delay, latency p50/p99)."""
         return self.sched.tenant_stats()
+
+    # ------------------------------------------------------------------
+    def drain(self) -> List[Request]:
+        """Flush everything still queued (ignoring the batch-age hold) and
+        collect every pending batch — no request left in flight."""
+        done: List[Request] = []
+        while self._queue or self._pending:
+            if self._queue:
+                self.flush(force=True)
+            done.extend(self.collect())
+        return done
+
+    def close(self) -> None:
+        """Drain in-flight work; close the scheduler only when the engine
+        created it (a caller-supplied scheduler — e.g. the daemon's shared
+        one — outlives any single engine)."""
+        self.drain()
+        if self._owns_sched:
+            self.sched.close()
+        else:
+            self.sched.sync()
+
+    def __enter__(self) -> "ServingEngine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
