@@ -1,0 +1,151 @@
+"""Static-analysis benchmark: lint wall time, verifier coverage, and the
+sanitizer runtime-mode overhead.
+
+Three measurements, each with fail-fast gates (``BENCH_analysis.json``):
+
+* **lint** — the access-mode checker over every in-repo ``GrFunction``
+  declaration (same module set as ``python -m repro.analysis lint``).
+  Gates: zero issues on the shipped declarations and wall time <= 10 s —
+  the lint runs in ci_fast.sh on every push, so it has to stay cheap.
+
+* **verify** — capture a benchsuite episode on the simulator and run the
+  happens-before verifier over the live window and the cached plan.
+  Gates: zero violations, and at least one plan with a non-trivial
+  element count actually verified (an empty sweep proves nothing).
+
+* **sanitizer** — the same eager multi-branch scenario on the simulator
+  with ``sanitize=False`` vs ``sanitize=True`` (per-element version-vector
+  checks on every start/finish).  Gates: sanitized wall time <= 2x plain
+  (3x in smoke — tiny runs amortize less), every element checked, zero
+  races on a race-free workload.
+"""
+from __future__ import annotations
+
+import importlib
+import json
+import time
+
+from repro.analysis.cli import _LINT_MODULES
+from repro.analysis.modes import lint_functions
+from repro.analysis.verifier import verify_scheduler
+from repro.benchsuite import BENCHMARKS, build_task_parallel
+from repro.benchsuite.costmodel import P100, sim_hardware
+from repro.core import make_scheduler
+
+from .common import emit
+
+
+# ----------------------------------------------------------------------
+def bench_lint() -> dict:
+    t0 = time.perf_counter()
+    for mod in _LINT_MODULES:
+        importlib.import_module(mod)
+    from repro.daemon import jobs as _jobs
+    _jobs._jax_chain_fns()          # job kernels declare lazily; poke them
+    reports = lint_functions()
+    wall_s = time.perf_counter() - t0
+    issues = [str(i) for r in reports for i in r.issues]
+    return {"functions": len(reports),
+            "skipped": sum(1 for r in reports if r.skipped),
+            "issues": issues, "wall_s": wall_s}
+
+
+# ----------------------------------------------------------------------
+def bench_verify(smoke: bool) -> dict:
+    bench = BENCHMARKS["HITS"]
+    data = bench.make_data(0.001 if smoke else 0.01)
+    s = make_scheduler("parallel", simulate=True,
+                       hw=sim_hardware(P100, "parallel", True))
+    try:
+        with s.capture("bench_verify"):
+            bench.build(s, data, gpu=P100, iters=2)
+        t0 = time.perf_counter()
+        violations = [str(v) for v in verify_scheduler(s)]
+        wall_s = time.perf_counter() - t0
+        plans = s.plan_cache.all_plans()
+        plan_elements = sum(len(p.elements) for p in plans)
+        s.sync()
+    finally:
+        s.shutdown()
+    return {"plans": len(plans), "plan_elements": plan_elements,
+            "violations": violations, "wall_s": wall_s}
+
+
+# ----------------------------------------------------------------------
+def _eager_scenario(sanitize: bool, *, branches: int, chain: int,
+                    reps: int) -> dict:
+    walls = []
+    checked = races = 0
+    for _ in range(reps):
+        s = make_scheduler("parallel", simulate=True, sanitize=sanitize)
+        try:
+            t0 = time.perf_counter()
+            build_task_parallel(s, branches=branches, chain=chain, n=1 << 10)
+            s.sync()
+            walls.append(time.perf_counter() - t0)
+            if sanitize:
+                st = s.stats()
+                checked = st["sanitizer_elements_checked"]
+                races = st["sanitizer_races_detected"]
+        finally:
+            s.shutdown()
+    return {"wall_s": min(walls), "elements_checked": checked,
+            "races": races}
+
+
+def bench_sanitizer(smoke: bool) -> dict:
+    branches, chain = (3, 4) if smoke else (6, 12)
+    reps = 3 if smoke else 5
+    plain = _eager_scenario(False, branches=branches, chain=chain, reps=reps)
+    sane = _eager_scenario(True, branches=branches, chain=chain, reps=reps)
+    return {"branches": branches, "chain": chain,
+            "plain_wall_s": plain["wall_s"],
+            "sanitize_wall_s": sane["wall_s"],
+            "ratio": sane["wall_s"] / max(plain["wall_s"], 1e-9),
+            "elements_checked": sane["elements_checked"],
+            "races": sane["races"]}
+
+
+# ----------------------------------------------------------------------
+def main(smoke: bool = False) -> list:
+    max_lint_s = 10.0
+    max_ratio = 3.0 if smoke else 2.0
+    lint = bench_lint()
+    verify = bench_verify(smoke)
+    sani = bench_sanitizer(smoke)
+    result = {"lint": lint, "verify": verify, "sanitizer": sani,
+              "max_lint_s": max_lint_s, "max_sanitizer_ratio": max_ratio}
+    rows = [
+        ("analysis/lint", lint["wall_s"] * 1e6,
+         f"functions={lint['functions']} skipped={lint['skipped']} "
+         f"issues={len(lint['issues'])} (gate <= {max_lint_s:.0f}s)"),
+        ("analysis/verify", verify["wall_s"] * 1e6,
+         f"plans={verify['plans']} elements={verify['plan_elements']} "
+         f"violations={len(verify['violations'])}"),
+        ("analysis/sanitizer", sani["sanitize_wall_s"] * 1e6,
+         f"plain_us={sani['plain_wall_s'] * 1e6:.0f} "
+         f"ratio={sani['ratio']:.2f} checked={sani['elements_checked']} "
+         f"races={sani['races']} (gate <= {max_ratio}x)"),
+    ]
+    if not smoke:
+        with open("BENCH_analysis.json", "w") as f:
+            json.dump(result, f, indent=2, sort_keys=True)
+    emit(rows)
+    # Fail-fast gates: the analysis passes run in CI on every push, so
+    # they must stay cheap, quiet on shipped code, and actually engaged.
+    assert not lint["issues"], f"shipped declarations mis-declared: {lint}"
+    assert lint["wall_s"] <= max_lint_s, (
+        f"lint took {lint['wall_s']:.1f}s > {max_lint_s:.0f}s budget")
+    assert not verify["violations"], verify["violations"]
+    assert verify["plans"] >= 1 and verify["plan_elements"] >= 10, (
+        f"verifier swept a trivial plan set: {verify}")
+    assert sani["elements_checked"] > 0, "sanitizer hooks never fired"
+    assert sani["races"] == 0, f"false-positive races: {sani}"
+    assert sani["ratio"] <= max_ratio, (
+        f"sanitize=True cost {sani['ratio']:.2f}x > {max_ratio}x eager sim")
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    main(smoke="--smoke" in sys.argv)

@@ -67,7 +67,7 @@ def run_mode(mode: str, episodes: int, warmup: int):
     xs = _arrays(s, mode)
     fns = _episode_fns()
     wall, sim = [], []
-    for ep in range(warmup + episodes):
+    for _ep in range(warmup + episodes):
         t0 = time.perf_counter()
         t0s = s.executor.host_time
         if mode == "legacy":

@@ -3,7 +3,6 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.benchsuite import BENCHMARKS, GPUS
 from repro.benchsuite.costmodel import sim_hardware
 from repro.core import make_scheduler
 

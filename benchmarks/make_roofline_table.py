@@ -42,7 +42,7 @@ def build_table() -> str:
         if m["fits_hbm"]:
             fits = "yes"
         else:
-            fits = "**no** ({:.1f}x)".format(m["hbm_fraction"])
+            fits = f"**no** ({m['hbm_fraction']:.1f}x)"
         row = (f"| {arch} | {shape} | {fits} | "
                f"{r['compute_s']*1e3:.1f} | {r['memory_s']*1e3:.1f} | "
                f"{r['collective_s']*1e3:.1f} | {r['dominant'].replace('_s','')} | "

@@ -4,13 +4,21 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
-# Lint first: imports + obvious errors only (scope and rules in ruff.toml).
-# The gate is advisory on hosts without ruff; CI always installs it.
+# Lint first — blocking (scope and rule families in ruff.toml: E9/F plus
+# bugbear and pyupgrade).  Hosts without ruff fall through so the test
+# tiers still run offline; CI always installs ruff and enforces the gate.
 if command -v ruff >/dev/null 2>&1; then
   ruff check .
 else
-  echo "[ci_fast] ruff not installed; skipping lint (CI runs it)"
+  echo "[ci_fast] ruff not installed; lint enforced by CI only"
 fi
+# Access-mode lint: every registered GrFunction's declared const/out/inout
+# modes checked against its traced jaxpr (plus the examples' declarations).
+# Exit 1 on any under-/over-declaration.
+python -m repro.analysis lint \
+  --file examples/quickstart.py \
+  --file examples/serve_lm.py \
+  --file examples/train_lm.py
 # Capture/replay fast path first: a focused signal before the full sweep
 # (these also run as part of the suite below).
 python -m pytest -q tests/test_capture.py
@@ -39,4 +47,8 @@ python -m pytest -q tests/test_slo.py
 # when calm); the socket round-trip itself is covered by
 # tests/test_daemon.py::test_cli_socket_roundtrip_smoke in the sweep below.
 python -m benchmarks.bench_daemon --smoke
+# Static-analysis smoke: lint wall-time ceiling, happens-before verifier
+# over a captured benchsuite plan, and the sanitizer-mode overhead gate
+# (sanitize=True must stay within 2x of the plain eager sim run).
+python -m benchmarks.bench_analysis --smoke
 exec python -m pytest -q -m "not slow" "$@"

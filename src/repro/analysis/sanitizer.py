@@ -1,0 +1,205 @@
+"""Runtime sanitizer: shadow version-vectors + const checksum canaries.
+
+``GrScheduler(sanitize=True)`` installs a :class:`Sanitizer` on the
+executor's element-boundary hooks (``pre_exec``/``post_exec``, called
+around every element body on both executors).  It shadow-tracks, per
+``dep_key``:
+
+* the **in-flight access set** — which elements currently hold the array
+  for reading/writing.  A write beginning while another access is in
+  flight, or a read beginning while a write is in flight, is an observed
+  race (a conflicting pair the DAG failed to order) and raises
+  :class:`SanitizerError` immediately, attributing both elements;
+* a **version counter**, bumped at each write completion.  Readers record
+  the version at element start and re-check it at completion;
+* on the real executor, a **checksum canary** over ``const`` operands:
+  the operand's bytes are hashed before and after the kernel body, so a
+  kernel that mutates a const-declared operand in place (a write the DAG
+  cannot see) is caught at the element boundary.
+
+The tracking is purely observational: it never blocks, reorders or
+copies, so ``sanitize=False`` (the default — no hooks installed) is
+bit-identical, and sim-executor timelines are unchanged even when it is
+on (the hooks run outside the simulated clock).
+"""
+from __future__ import annotations
+
+import threading
+import zlib
+from typing import Dict, List, Optional, Set, Tuple
+
+import numpy as np
+
+from ..core.element import AccessMode, ComputationalElement
+
+
+class SanitizerError(RuntimeError):
+    """An observed race or write-through-const at an element boundary."""
+
+
+class _KeyState:
+    __slots__ = ("version", "writer", "writer_name", "readers")
+
+    def __init__(self) -> None:
+        self.version = 0
+        self.writer: Optional[int] = None       # uid of in-flight writer
+        self.writer_name = ""
+        self.readers: Dict[int, str] = {}       # uid -> name, in-flight reads
+
+
+def _array_name(e: ComputationalElement, key) -> str:
+    for a in e.args:
+        if a.key == key:
+            return getattr(a.array, "name", None) or str(key)
+    return str(key)
+
+
+def _const_bytes(e: ComputationalElement, key) -> Optional[bytes]:
+    """Current value bytes of the operand behind ``key`` (device copy if
+    valid, else host copy); None when no concrete value exists (sim)."""
+    for a in e.args:
+        if a.key != key:
+            continue
+        ma = a.array
+        try:
+            if getattr(ma, "device_valid", False) and \
+                    getattr(ma, "device", None) is not None:
+                return np.asarray(ma.device).tobytes()
+            if getattr(ma, "host_valid", False) and \
+                    getattr(ma, "host", None) is not None:
+                return np.asarray(ma.host).tobytes()
+        except Exception:
+            return None
+    return None
+
+
+class Sanitizer:
+    """Thread-safe shadow tracker; see the module docstring."""
+
+    def __init__(self, checksums: bool = False) -> None:
+        self.checksums = bool(checksums)
+        self._lock = threading.Lock()
+        self._state: Dict[object, _KeyState] = {}
+        self._modes: Dict[int, Dict[object, AccessMode]] = {}
+        self._observed: Dict[int, List[Tuple[object, int]]] = {}
+        self._canaries: Dict[int, List[Tuple[object, int]]] = {}
+        self.elements_checked = 0
+        self.races_detected = 0
+
+    # ------------------------------------------------------------------
+    def on_schedule(self, e: ComputationalElement) -> None:
+        """Snapshot the declared access set at submission time (args can
+        be rebound later on replay paths; the declaration is the claim
+        being audited)."""
+        with self._lock:
+            self._modes[e.uid] = dict(e.arg_modes())
+
+    def _modes_of(self, e: ComputationalElement) -> Dict[object, AccessMode]:
+        return self._modes.get(e.uid) or dict(e.arg_modes())
+
+    # ------------------------------------------------------------------
+    def pre_exec(self, e: ComputationalElement) -> None:
+        """Element body is about to run: claim its declared accesses and
+        raise on any conflicting in-flight access."""
+        with self._lock:
+            modes = self._modes_of(e)
+            observed: List[Tuple[object, int]] = []
+            canaries: List[Tuple[object, int]] = []
+            for key, mode in modes.items():
+                st = self._state.setdefault(key, _KeyState())
+                aname = _array_name(e, key)
+                if mode.writes:
+                    if st.writer is not None and st.writer != e.uid:
+                        self.races_detected += 1
+                        raise SanitizerError(
+                            f"write-write race on array {aname!r}: "
+                            f"{e.name}(uid {e.uid}) began while "
+                            f"{st.writer_name}(uid {st.writer}) is still "
+                            f"writing — the DAG never ordered this WAW "
+                            f"pair")
+                    if st.readers:
+                        ruid, rname = next(iter(st.readers.items()))
+                        self.races_detected += 1
+                        raise SanitizerError(
+                            f"read-write race on array {aname!r}: writer "
+                            f"{e.name}(uid {e.uid}) began while "
+                            f"{rname}(uid {ruid}) is still reading — the "
+                            f"DAG never ordered this WAR pair")
+                    st.writer, st.writer_name = e.uid, e.name
+                else:
+                    if st.writer is not None:
+                        self.races_detected += 1
+                        raise SanitizerError(
+                            f"write-read race on array {aname!r}: reader "
+                            f"{e.name}(uid {e.uid}) began while "
+                            f"{st.writer_name}(uid {st.writer}) is still "
+                            f"writing — the DAG never ordered this RAW "
+                            f"pair")
+                    st.readers[e.uid] = e.name
+                    observed.append((key, st.version))
+                    if self.checksums and mode is AccessMode.CONST:
+                        data = _const_bytes(e, key)
+                        if data is not None:
+                            canaries.append((key, zlib.crc32(data)))
+            if observed:
+                self._observed[e.uid] = observed
+            if canaries:
+                self._canaries[e.uid] = canaries
+
+    def post_exec(self, e: ComputationalElement) -> None:
+        """Element body finished: release claims, bump write versions,
+        re-check read versions and const checksums."""
+        with self._lock:
+            modes = self._modes_of(e)
+            observed = dict(self._observed.pop(e.uid, ()))
+            canaries = dict(self._canaries.pop(e.uid, ()))
+            self._modes.pop(e.uid, None)
+            self.elements_checked += 1
+            for key, mode in modes.items():
+                st = self._state.get(key)
+                if st is None:
+                    continue
+                aname = _array_name(e, key)
+                if mode.writes:
+                    if st.writer == e.uid:
+                        st.writer, st.writer_name = None, ""
+                    st.version += 1
+                else:
+                    st.readers.pop(e.uid, None)
+                    v0 = observed.get(key)
+                    if v0 is not None and st.version != v0:
+                        self.races_detected += 1
+                        raise SanitizerError(
+                            f"torn read on array {aname!r}: {e.name}"
+                            f"(uid {e.uid}) observed version {v0} at start "
+                            f"but {st.version} at completion — a writer "
+                            f"ran mid-read without a DAG edge")
+                    crc0 = canaries.get(key)
+                    if crc0 is not None:
+                        data = _const_bytes(e, key)
+                        if data is not None and zlib.crc32(data) != crc0:
+                            self.races_detected += 1
+                            raise SanitizerError(
+                                f"write through const on array {aname!r}: "
+                                f"checksum changed across {e.name}"
+                                f"(uid {e.uid}) — the kernel (or a "
+                                f"concurrent element) mutated a "
+                                f"const-declared operand in place")
+                if st.writer is None and not st.readers and st.version == 0:
+                    self._state.pop(key, None)
+
+    # ------------------------------------------------------------------
+    def in_flight(self) -> Set[int]:
+        with self._lock:
+            uids: Set[int] = set()
+            for st in self._state.values():
+                if st.writer is not None:
+                    uids.add(st.writer)
+                uids.update(st.readers)
+            return uids
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {"sanitizer_elements_checked": self.elements_checked,
+                    "sanitizer_races_detected": self.races_detected,
+                    "sanitizer_tracked_keys": len(self._state)}

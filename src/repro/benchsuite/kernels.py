@@ -208,14 +208,28 @@ ENSEMBLE_AVG = _gr_function(k_ensemble_avg, modes=("const", "const", "out"),
                             name="ARGMAX")
 SPMV = _gr_function(k_spmv,
                     modes=("const", "const", "const", "const", "out"),
-                    name="SPMV")
+                    name="SPMV",
+                    lint_shapes=(((8,), np.float32), ((8,), np.int32),
+                                 ((8,), np.int32), ((8,), np.float32),
+                                 ((8,), np.float32)))
 L2_NORM = _gr_function(k_l2_norm, modes=("const", "out"), name="NORM")
-DIVIDE = _gr_function(k_divide, modes=("const", "const", "inout"),
+# DIVIDE never reads the prior value of its destination (pure x/norm
+# store); ``inout`` here forced a spurious prefetch of dead data.  The
+# WAR edges against this iteration's SpMV readers come from the *write*
+# and are identical under ``out``.
+DIVIDE = _gr_function(k_divide, modes=("const", "const", "out"),
                       name="DIV")
 CONV_RELU_POOL = _gr_function(k_conv_relu_pool,
-                              modes=("const", "const", "out"), name="CONV")
+                              modes=("const", "const", "out"), name="CONV",
+                              lint_shapes=(((1, 1, 8, 8), np.float32),
+                                           ((1, 1, 3, 3), np.float32),
+                                           ((1, 1, 4, 4), np.float32)))
 DENSE_EMBED = _gr_function(k_dense_embed, modes=("const", "const", "out"),
                            name="DENSE")
 CONCAT_DENSE = _gr_function(k_concat_dense,
                             modes=("const", "const", "const", "out"),
-                            name="HEAD")
+                            name="HEAD",
+                            lint_shapes=(((8, 4), np.float32),
+                                         ((8, 4), np.float32),
+                                         ((8, 1), np.float32),
+                                         ((8, 1), np.float32)))

@@ -175,8 +175,9 @@ class IMG(Benchmark):
         result = None
         for it in range(iters):
             img = sched.array(data["img"], name=f"img_{it}")
-            mk = lambda nm: sched.array(shape=(h, w), dtype=np.float32,
-                                        name=f"{nm}_{it}")
+            def mk(nm, it=it):
+                return sched.array(shape=(h, w), dtype=np.float32,
+                                   name=f"{nm}_{it}")
             b_s, b_m, b_l = mk("bs"), mk("bm"), mk("bl")
             sharp, edges, mask, comb, outp = (mk("sharp"), mk("edges"),
                                               mk("mask"), mk("comb"),
@@ -330,7 +331,7 @@ class HITS(Benchmark):
         a_nrm = sched.array(shape=(1,), dtype=np.float32, name="a_nrm")
         h_nrm = sched.array(shape=(1,), dtype=np.float32, name="h_nrm")
         spmv_fl, spmv_by = 2 * nnz, 12 * nnz + 8 * n
-        for it in range(iters):
+        for _it in range(iters):
             # a' = A^T h ; h' = A a   (read previous iterates concurrently)
             self._launch(sched, K.SPMV,
                          [g["t_vals"], g["t_cols"], g["t_rows"], hub, a_new],
@@ -346,8 +347,9 @@ class HITS(Benchmark):
             self._launch(sched, K.L2_NORM, [h_new, h_nrm],
                          "NORM_H", flops=2 * n, bytes_moved=4 * n, gpu=gpu,
                          parallelism=0.4)
-            # writes back into `auth`/`hub` (declared inout on DIVIDE):
-            # WAR with this iteration's SpMVs
+            # writes back into `auth`/`hub` (declared out on DIVIDE — the
+            # destination's prior value is never read): WAR with this
+            # iteration's SpMVs
             self._launch(sched, K.DIVIDE, [a_new, a_nrm, auth], "DIV_A",
                          flops=n, bytes_moved=8 * n, gpu=gpu)
             self._launch(sched, K.DIVIDE, [h_new, h_nrm, hub], "DIV_H",

@@ -277,6 +277,11 @@ class PlanCache:
     def candidates(self, name: str) -> List[ExecutionPlan]:
         return list(self._plans.get(name, {}).values())
 
+    def all_plans(self) -> List[ExecutionPlan]:
+        """Every cached plan across all names (verifier/introspection)."""
+        return [p for by_sig in self._plans.values()
+                for p in by_sig.values()]
+
     def store(self, plan: ExecutionPlan) -> List[ExecutionPlan]:
         """Cache ``plan``; returns the plans displaced by it (same signature
         or LRU overflow) so the caller can release their lane reservations.
@@ -887,6 +892,14 @@ class CaptureContext:
                     from .planopt import optimize_plan
                     with self.sched.pipeline:
                         plan = optimize_plan(self.sched, plan)
+                if getattr(self.sched, "sanitize", False):
+                    # Sanitize mode: never cache a plan that fails the
+                    # happens-before/liveness verifier.
+                    from ..analysis.verifier import (PlanVerificationError,
+                                                     verify_plan)
+                    violations = verify_plan(plan)
+                    if violations:
+                        raise PlanVerificationError(plan.name, violations)
                 for displaced in self.sched.plan_cache.store(plan):
                     self.sched.streams.unreserve(displaced.key)
         return False

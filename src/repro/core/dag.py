@@ -250,6 +250,41 @@ class ComputationDAG:
         self._sweep()
 
     # ------------------------------------------------------------------
+    def validate(self) -> List[str]:
+        """Structural invariant check used by ``repro.analysis``: returns
+        human-readable problems (empty = consistent).
+
+        Invariants: frontier membership equals the ``active`` flag with a
+        non-empty dependency set; dependency sets never grow beyond the
+        element's own argument keys (writes only ever *consume* entries);
+        per-array frontier state points only at elements that could still
+        legally become parents under :meth:`_eligible`."""
+        problems: List[str] = []
+        for e in self.frontier:
+            if not e.active:
+                problems.append(
+                    f"retired element {e.name}(uid {e.uid}) still on the "
+                    f"frontier")
+            elif not e.dep_set:
+                problems.append(
+                    f"frontier element {e.name}(uid {e.uid}) has an empty "
+                    f"dependency set — §IV-B says it must retire")
+        for key, st in self._state.items():
+            for r in st.readers:
+                if r.active and key not in r.dep_set:
+                    problems.append(
+                        f"active reader {r.name}(uid {r.uid}) listed for "
+                        f"key {key} without a dependency-set entry")
+        for e in self.frontier:
+            keys = {a.key for a in e.args}
+            extra = set(e.dep_set) - keys
+            if extra:
+                problems.append(
+                    f"element {e.name}(uid {e.uid}) tracks dependency keys "
+                    f"{sorted(extra)} outside its argument list")
+        return problems
+
+    # ------------------------------------------------------------------
     def ancestors(self, e: ComputationalElement) -> Set[ComputationalElement]:
         out: Set[ComputationalElement] = set()
         stack = list(e.parents)

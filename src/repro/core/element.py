@@ -60,6 +60,12 @@ class AccessMode(enum.Enum):
     def writes(self) -> bool:
         return self in (AccessMode.OUT, AccessMode.INOUT)
 
+    def conflicts_with(self, other: "AccessMode") -> bool:
+        """Two accesses to the same array conflict (must be ordered) unless
+        both are read-only — the RAW/WAR/WAW rule the verifier and the
+        runtime sanitizer share."""
+        return self.writes or other.writes
+
 
 def dep_key(array: Any) -> int:
     """Dependency-tracking key for an argument handle.

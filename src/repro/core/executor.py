@@ -54,6 +54,14 @@ class Executor:
     # and returns True when it changed anything.
     on_boundary = None
     on_stall = None
+    # Sanitizer hooks (installed by ``GrScheduler(sanitize=True)``; None =
+    # no-op).  ``pre_exec(element)`` fires when the element actually starts
+    # executing (after its waits/gates resolved), ``post_exec(element)``
+    # when its body finished but *before* the completion event is
+    # published — so correctly-ordered children can never appear to
+    # overlap their parent.
+    pre_exec = None
+    post_exec = None
 
     def _notify_boundary(self, element: ComputationalElement) -> None:
         cb = self.on_boundary
@@ -209,10 +217,16 @@ class _LaneWorker(threading.Thread):
                 if gate is not None:
                     gate.wait()
                 element.state = ElementState.RUNNING
+                pre = self.executor.pre_exec
+                if pre is not None:
+                    pre(element)
                 t0 = self.executor.host_now()
                 _run_device_element(element,
                                     self.executor.jax_device_for(element))
                 t1 = self.executor.host_now()
+                post = self.executor.post_exec
+                if post is not None:
+                    post(element)
                 element.t_start, element.t_end = t0, t1
                 kind = ("h2d" if element.kind in (ElementKind.TRANSFER,
                                                  ElementKind.RELOAD)
@@ -499,6 +513,8 @@ class SimExecutor(Executor):
                     self._pending.remove(t)
                     t.t_start = self.now
                     t.element.state = ElementState.RUNNING
+                    if self.pre_exec is not None:
+                        self.pre_exec(t.element)
                     self._running.append(t)
                     started = True
         self._recompute_rates()
@@ -607,6 +623,8 @@ class SimExecutor(Executor):
 
     def _finish(self, t: _SimTask) -> None:
         e = t.element
+        if self.post_exec is not None:
+            self.post_exec(e)
         self._end[e.uid] = self.now
         e.t_start, e.t_end = t.t_start, self.now
         e.state = ElementState.DONE

@@ -37,7 +37,8 @@ from __future__ import annotations
 
 import itertools
 import threading
-from typing import Any, Callable, Dict, Optional, Sequence, Tuple, Union
+import weakref
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -170,7 +171,7 @@ def _resolve_mode(mode: Union[str, AccessMode]) -> AccessMode:
         return _MODE_NAMES[str(mode).lower()]
     except KeyError:
         raise ValueError(f"unknown access mode {mode!r}; use one of "
-                         f"{sorted(set(_MODE_NAMES))}")
+                         f"{sorted(set(_MODE_NAMES))}") from None
 
 
 class GrFunction:
@@ -195,6 +196,7 @@ class GrFunction:
                  tenant: str = DEFAULT_TENANT,
                  device: Optional[int] = None,
                  deadline_s: Optional[float] = None,
+                 lint_shapes: Optional[Sequence] = None,
                  _fid: Optional[int] = None) -> None:
         self.fn = fn
         self.modes: Tuple[AccessMode, ...] = tuple(
@@ -212,6 +214,12 @@ class GrFunction:
         self.tenant = tenant
         self.device = device
         self.deadline_s = deadline_s
+        # Shadow-operand hints for the access-mode checker (repro.analysis):
+        # one (shape, dtype) pair per declared argument, for kernels whose
+        # generic float shadows would not trace (e.g. integer index args).
+        self.lint_shapes = (tuple((tuple(s), np.dtype(d))
+                                  for s, d in lint_shapes)
+                            if lint_shapes is not None else None)
 
     # -- declaration helpers -------------------------------------------
     def _out_positions(self) -> Tuple[int, ...]:
@@ -272,7 +280,8 @@ class GrFunction:
             except IndexError:
                 raise TypeError(
                     f"{call_name}: output spec refers to input {spec} but "
-                    f"only {len(given)} argument(s) were supplied")
+                    f"only {len(given)} argument(s) were "
+                    f"supplied") from None
             shape, dtype = tuple(like.shape), like.dtype
         elif callable(spec):
             shape, dtype = spec(*given)
@@ -308,6 +317,7 @@ class GrFunction:
             tenant=known.get("tenant", self.tenant),
             device=known.get("device", self.device),
             deadline_s=known.get("deadline_s", self.deadline_s),
+            lint_shapes=self.lint_shapes,
             _fid=self.fid)
 
     # -- the call -------------------------------------------------------
@@ -378,19 +388,36 @@ class GrFunction:
         return f"<GrFunction {self.name} fid={self.fid} modes=({modes})>"
 
 
+# Every ``function()`` declaration registers here (weakly — a declaration
+# dropped by user code disappears from lint sweeps with it).  The access-
+# mode checker (``python -m repro.analysis lint``) audits this registry.
+_DECLARATIONS: "weakref.WeakSet[GrFunction]" = weakref.WeakSet()
+
+
+def declared_functions() -> List[GrFunction]:
+    """Live ``function()`` declarations of this process, in fid order."""
+    return sorted(_DECLARATIONS, key=lambda gf: gf.fid)
+
+
 def function(fn: Optional[Callable],
              modes: Sequence[Union[str, AccessMode]], *,
              name: Optional[str] = None, outputs: Any = None,
              cost_s: float = 0.0, tune: Optional[dict] = None,
              scheduler: Optional[GrScheduler] = None,
+             lint_shapes: Optional[Sequence] = None,
              **config) -> GrFunction:
     """Declare a kernel once; every later call is plain ``f(x, y)``.
 
     ``modes`` annotates the signature (``"const"``/``"out"``/``"inout"``,
     paper §IV-D) — the one place access intent is ever written.  ``outputs``
     optionally describes how to allocate omitted trailing ``out`` arguments
-    (see :class:`GrFunction`).  Remaining keyword arguments become the
-    default launch config (e.g. ``parallel_fraction`` for the simulator).
+    (see :class:`GrFunction`); ``lint_shapes`` optionally gives the
+    access-mode checker one ``(shape, dtype)`` shadow operand per argument.
+    Remaining keyword arguments become the default launch config (e.g.
+    ``parallel_fraction`` for the simulator).
     """
-    return GrFunction(fn, modes, name=name, outputs=outputs, cost_s=cost_s,
-                      tune=tune, scheduler=scheduler, config=config)
+    gf = GrFunction(fn, modes, name=name, outputs=outputs, cost_s=cost_s,
+                    tune=tune, scheduler=scheduler,
+                    lint_shapes=lint_shapes, config=config)
+    _DECLARATIONS.add(gf)
+    return gf

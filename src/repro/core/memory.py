@@ -47,6 +47,51 @@ class DeviceOutOfMemoryError(RuntimeError):
     out-of-core, a *single* computational element is over-budget."""
 
 
+class DriftReport:
+    """Structured logical-vs-physical residency reconciliation.
+
+    ``problems`` are the ledger inconsistencies; ``logical`` is the
+    per-device byte count the pools account against their budgets;
+    ``physical`` (when the check ran with ``physical=True``) is the
+    per-device byte count of actually-installed device values."""
+
+    def __init__(self, problems: List[str], logical: Dict[int, int],
+                 physical: Optional[Dict[int, int]] = None) -> None:
+        self.problems = list(problems)
+        self.logical = dict(logical)
+        self.physical = dict(physical) if physical is not None else None
+
+    @property
+    def ok(self) -> bool:
+        return not self.problems
+
+    def to_json(self) -> dict:
+        return {"ok": self.ok, "problems": list(self.problems),
+                "logical_bytes": dict(self.logical),
+                "physical_bytes": (dict(self.physical)
+                                   if self.physical is not None else None)}
+
+    def __str__(self) -> str:
+        if self.ok:
+            return "memory ledger consistent"
+        lines = [f"{len(self.problems)} memory-ledger problem(s):"]
+        lines += [f"  - {p}" for p in self.problems]
+        lines.append(f"  logical bytes/device: {self.logical}")
+        if self.physical is not None:
+            lines.append(f"  physical bytes/device: {self.physical}")
+        return "\n".join(lines)
+
+
+class MemoryDriftError(RuntimeError):
+    """Raised by :meth:`MemoryManager.verify` when the logical ledger and
+    the tracked array/tier state disagree.  Carries the full
+    :class:`DriftReport` for the daemon's drift alarm path."""
+
+    def __init__(self, report: DriftReport) -> None:
+        self.report = report
+        super().__init__(str(report))
+
+
 class MemoryPool:
     """Resident-set tracker for one device: byte budget, LRU ordering and
     spill statistics.
@@ -628,17 +673,23 @@ class MemoryManager:
         physical values, and a mid-flight real run legitimately lags."""
         out: Dict[int, int] = {p.device_id: 0 for p in self.pools}
         with self._lock:
-            for k, (dev, ref) in self._where.items():
+            for _k, (dev, ref) in self._where.items():
                 ma = ref() if callable(ref) else None
                 if ma is None or getattr(ma, "device", None) is None:
                     continue
                 out[dev] = out.get(dev, 0) + _nbytes(ma)
         return out
 
-    def verify(self) -> List[str]:
-        """Debug hook: reconcile logical residency (array location bits,
-        tier membership) against the pool ledger.  Returns a list of
-        discrepancy strings — empty means the accounting is exact."""
+    def verify(self, *, raise_on_drift: bool = True,
+               physical: bool = False) -> DriftReport:
+        """Reconcile logical residency (array location bits, tier
+        membership) against the pool ledger; with ``physical=True`` also
+        diff the logical byte counts against physically-installed device
+        values (only meaningful at a quiescent point on the real
+        executor).  Returns a :class:`DriftReport`; raises
+        :class:`MemoryDriftError` on any problem unless
+        ``raise_on_drift=False`` (the daemon monitor's alarm path reads
+        the report instead of unwinding the sampler)."""
         problems: List[str] = []
         with self._lock:
             for p in self.pools:
@@ -694,7 +745,20 @@ class MemoryManager:
                     if k not in mine:
                         problems.append(f"tier {t.name} holds key {k} the "
                                         f"manager does not track")
-        return problems
+        logical = self.logical_resident_bytes()
+        phys: Optional[Dict[int, int]] = None
+        if physical:
+            phys = self.physical_resident_bytes()
+            for dev, lb in sorted(logical.items()):
+                pb = phys.get(dev, 0)
+                if pb != lb:
+                    problems.append(
+                        f"device {dev}: logical ledger says {lb} resident "
+                        f"bytes but {pb} bytes are physically installed")
+        report = DriftReport(problems, logical, phys)
+        if problems and raise_on_drift:
+            raise MemoryDriftError(report)
+        return report
 
     def close(self) -> None:
         """Release every tier's backing resources (spool directories,

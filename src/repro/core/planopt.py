@@ -91,6 +91,14 @@ def optimize_plan(sched, plan: ExecutionPlan) -> ExecutionPlan:
         return plan     # safety net: never adopt an over-budget rewrite
     if _moved_bytes(new) >= _moved_bytes(plan):
         return plan     # strictly-better or keep the greedy trace
+    if getattr(sched, "sanitize", False):
+        # Sanitize mode: a rewrite must pass the happens-before/liveness
+        # verifier before it can replace the (already verified) greedy
+        # trace — a planopt bug must never reach the replay fast path.
+        from ..analysis.verifier import PlanVerificationError, verify_plan
+        violations = verify_plan(new)
+        if violations:
+            raise PlanVerificationError(new.name, violations)
     return new
 
 
@@ -374,7 +382,7 @@ def _resynthesize(sched, plan: ExecutionPlan,
                 return None     # single-element OOM: greedy raises too
             need = res_bytes[d] + incoming - budget
             if need > 0:
-                def victim_key(s: int) -> Tuple:
+                def victim_key(s: int, pos: int = pos) -> Tuple:
                     i = bisect_right(reads_at[s], pos)
                     nxt = reads_at[s][i] if i < len(reads_at[s]) else _INF
                     dirty = device_valid[s] and not host_valid[s]

@@ -56,7 +56,8 @@ class GrScheduler:
                  memory_budget: Budget = None,
                  spill_tiers: Optional[Sequence] = None,
                  plan_optimize: bool = True,
-                 slo_targets: Optional[Mapping[str, float]] = None) -> None:
+                 slo_targets: Optional[Mapping[str, float]] = None,
+                 sanitize: bool = False) -> None:
         assert policy in ("serial", "parallel")
         self.policy = policy
         self.num_devices = max(1, num_devices)
@@ -109,6 +110,24 @@ class GrScheduler:
         self.deadlines.full_boundary_checks = not self.executor.concurrent_waits
         self.executor.on_boundary = self.deadlines.on_boundary
         self.executor.on_stall = self.deadlines.ensure_progress
+        # Host-access ordering log for the happens-before verifier: each
+        # entry is ``(position, host_element)`` recorded once the host wait
+        # completed — the host element orders after its parents and before
+        # everything submitted from ``position`` on.  Cleared with
+        # ``_elements`` at every full sync; cheap enough to keep always-on.
+        self._host_log: List[tuple] = []
+        # Sanitizer runtime mode (repro.analysis): version-vector race
+        # detection at element boundaries.  Off by default — with
+        # ``sanitize=False`` no hook is installed and scheduling is
+        # bit-identical.
+        self.sanitize = bool(sanitize)
+        self.sanitizer = None
+        if self.sanitize:
+            from ..analysis.sanitizer import Sanitizer
+            self.sanitizer = Sanitizer(
+                checksums=not isinstance(self.executor, SimExecutor))
+            self.executor.pre_exec = self.sanitizer.pre_exec
+            self.executor.post_exec = self.sanitizer.post_exec
         self._closed = False
 
     # ------------------------------------------------------------------
@@ -291,6 +310,9 @@ class GrScheduler:
             for p in e.parents:
                 self.streams.release(p)
             self._mark_host_done(e)
+            # Verifier ordering log: this host access completed before any
+            # element at position >= len(_elements) was submitted.
+            self._host_log.append((len(self._elements), e))
             self.executor.record_host_span(e, t0, self.executor.host_now())
 
     def _sync_and_localize(self, ma: ManagedArray, writes: bool) -> None:
@@ -438,6 +460,17 @@ class GrScheduler:
             # history — unbounded memory and O(n^2) cost in long-running
             # serving loops.
             self._elements.clear()
+            self._host_log.clear()
+
+    def verify(self, plans: bool = True) -> None:
+        """Run the happens-before verifier (``repro.analysis``) over the
+        live element window, the DAG bookkeeping invariants and every
+        cached plan; raises :class:`PlanVerificationError` on any
+        violation."""
+        from ..analysis.verifier import PlanVerificationError, verify_scheduler
+        violations = verify_scheduler(self, plans=plans)
+        if violations:
+            raise PlanVerificationError("scheduler", violations)
 
     @property
     def timeline(self) -> Timeline:
@@ -458,7 +491,9 @@ class GrScheduler:
                     **self.executor.history.stats(),
                     **self.plan_cache.stats(),
                     **self.memory.stats(),
-                    **self.deadlines.stats()}
+                    **self.deadlines.stats(),
+                    **(self.sanitizer.stats() if self.sanitizer is not None
+                       else {})}
 
     def tenant_stats(self) -> dict:
         """Per-tenant QoS metrics (makespan, queueing delay, completion

@@ -212,7 +212,8 @@ def make_placement(policy: Union[str, PlacementPolicy, None]
         return PLACEMENT_POLICIES[policy]()
     except KeyError:
         raise ValueError(f"unknown placement policy {policy!r}; "
-                         f"choose from {sorted(PLACEMENT_POLICIES)}")
+                         f"choose from "
+                         f"{sorted(PLACEMENT_POLICIES)}") from None
 
 
 # ======================================================================

@@ -302,6 +302,8 @@ class SubmissionPipeline:
         # with the monitor here (direct schedule() callers get stamped).
         sched.deadlines.tag(e)
         sched.executor.host_overhead(sched.launch_overhead_s)
+        if sched.sanitizer is not None:
+            sched.sanitizer.on_schedule(e)
         sched.dag.add(e)
         lane, events = sched.streams.assign(e, sched.executor.is_done)
         sched.executor.submit(e, lane.lane_id, events)

@@ -469,7 +469,7 @@ def make_tiers(spec) -> List[BackingTier]:
                 tiers.append(TIER_TYPES[item]())
             except KeyError:
                 raise ValueError(f"unknown spill tier {item!r}; choose from "
-                                 f"{sorted(TIER_TYPES)}")
+                                 f"{sorted(TIER_TYPES)}") from None
         else:
             raise TypeError(f"spill tier must be a BackingTier or a name, "
                             f"got {item!r}")

@@ -16,6 +16,9 @@ from dataclasses import dataclass, field
 from typing import Dict, Iterable, List, Optional, Tuple
 
 
+_NAN = float("nan")
+
+
 @dataclass(frozen=True)
 class Span:
     uid: int
@@ -27,7 +30,7 @@ class Span:
     # Multi-tenant QoS attribution (None/defaults for untagged spans).
     tenant: Optional[str] = None
     priority: int = 0
-    t_issue: float = float("nan")      # submission time; t0 - t_issue is the
+    t_issue: float = _NAN              # submission time; t0 - t_issue is the
     #                                    span's queueing delay
     deadline: Optional[float] = None   # absolute deadline (None = no SLO);
     #                                    met iff t1 <= deadline
@@ -138,7 +141,7 @@ class Timeline:
 
     def record(self, uid: int, name: str, kind: str, lane: Optional[int],
                t0: float, t1: float, *, tenant: Optional[str] = None,
-               priority: int = 0, t_issue: float = float("nan"),
+               priority: int = 0, t_issue: float = _NAN,
                deadline: Optional[float] = None) -> None:
         s = Span(uid, name, kind, lane, t0, t1,
                  tenant=tenant, priority=priority,

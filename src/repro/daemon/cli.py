@@ -103,7 +103,13 @@ def build_parser() -> argparse.ArgumentParser:
         if name == "wait":
             q.add_argument("--timeout", type=float, default=120.0)
 
-    sub.add_parser("jobs", help="list all jobs in the store")
+    jb = sub.add_parser("jobs", help="list all jobs in the store")
+    jb.add_argument("--audit", action="store_true",
+                    help="audit the job journal offline (no daemon needed): "
+                         "replay it through the lifecycle state machine and "
+                         "exit non-zero on any illegal history")
+    jb.add_argument("--store", default=default_store_path(),
+                    help="journal path for --audit (env REPRO_DAEMON_STORE)")
     st = sub.add_parser("stats", help="print daemon + scheduler stats")
     st.add_argument("--no-scheduler", action="store_true",
                     help="skip the scheduler stats block")
@@ -155,6 +161,12 @@ def main(argv: Optional[list] = None) -> int:
     args = build_parser().parse_args(argv)
     if args.cmd == "serve":
         return _serve(args)
+    if args.cmd == "jobs" and args.audit:
+        # Offline journal audit: reads the JSONL directly, never connects.
+        from repro.analysis.journal import audit_journal
+        audit = audit_journal(args.store)
+        _emit(audit.to_json())
+        return 0 if audit.ok else 1
 
     from .client import DaemonClient, DaemonError
     client = DaemonClient(args.socket)

@@ -59,7 +59,7 @@ class DaemonClient:
                 resp = recv_msg(self._sock)
             except OSError as exc:
                 self.close()
-                raise DaemonError(f"daemon connection lost: {exc}")
+                raise DaemonError(f"daemon connection lost: {exc}") from exc
             if resp is None:
                 self.close()
                 raise DaemonError("daemon closed the connection")

@@ -95,7 +95,7 @@ def run_job(scheduler, kind: str, params: Optional[dict] = None, *,
         handler = REGISTRY[kind]
     except KeyError:
         raise ValueError(f"unknown job kind {kind!r}; registered: "
-                         f"{sorted(REGISTRY)}")
+                         f"{sorted(REGISTRY)}") from None
     if ctx is None:
         ctx = JobContext(scheduler)
     return handler(ctx, **(params or {}))

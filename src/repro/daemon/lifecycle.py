@@ -141,17 +141,33 @@ class JobRecord:
             transitions=[tuple(tr) for tr in d.get("transitions", [])])
 
 
-def validate_history(transitions: List[Tuple[str, str, float]]) -> List[str]:
+def validate_history(transitions: List[Tuple[str, str, float]], *,
+                     check_times: bool = False) -> List[str]:
     """Audit a recorded transition history against the legal table.
 
     Returns a list of violation strings (empty = clean): illegal edges,
     broken chaining (an edge starting from a state the previous edge did
     not land in), transitions out of a terminal state, or a non-QUEUED
-    start.  Used by the recovery tests to prove no journal ever records an
+    start.  ``check_times=True`` additionally requires non-decreasing
+    timestamps (the journal auditor's wall-clock sanity check; the
+    recovery tests keep it off since fake clocks need not be monotone).
+    Used by the recovery tests to prove no journal ever records an
     impossible history."""
     problems: List[str] = []
     prev_dst: Optional[str] = None
-    for i, (src, dst, _t) in enumerate(transitions):
+    prev_t: Optional[float] = None
+    for i, (src, dst, t) in enumerate(transitions):
+        if check_times:
+            try:
+                tf = float(t)
+            except (TypeError, ValueError):
+                problems.append(f"edge {i}: non-numeric timestamp {t!r}")
+            else:
+                if prev_t is not None and tf < prev_t:
+                    problems.append(
+                        f"edge {i}: timestamp {tf} precedes previous "
+                        f"edge's {prev_t} — history is not append-ordered")
+                prev_t = tf
         try:
             s, d = JobState(src), JobState(dst)
         except ValueError:

@@ -142,6 +142,7 @@ class RuntimeMonitor:
         self.drift_alarms = 0
         self._drift_streak = 0
         self._drift_problems: List[str] = []
+        self._drift_report = None       # latest DriftReport from _reconcile
         self._last_t: Optional[float] = None
         # Arrival rate is measured over a sliding window, not one sample
         # interval: at a 20 ms cadence a single submit would read as an
@@ -192,25 +193,22 @@ class RuntimeMonitor:
         return min(1.0, busy / (interval * lanes))
 
     def _reconcile(self, quiescent: bool) -> List[str]:
-        """Logical-ledger self-check + logical-vs-physical accounting."""
+        """Logical-ledger self-check + logical-vs-physical accounting.
+
+        Physical accounting only means something on a real executor at a
+        quiescent point: the simulator installs no physical values, and a
+        mid-flight real run legitimately has logical bits ahead of the
+        device (flipped at schedule time).  The sampler must never unwind
+        on drift — it records the structured :class:`DriftReport` for the
+        alarm path instead of raising."""
         sched = self.scheduler
         if sched is None:
             return []
-        problems = sched.memory.verify()
-        # Physical accounting only means something on a real executor at a
-        # quiescent point: the simulator installs no physical values, and a
-        # mid-flight real run legitimately has logical bits ahead of the
-        # device (flipped at schedule time).
-        if quiescent and type(sched.executor).__name__ == "ThreadLaneExecutor":
-            logical = sched.memory.logical_resident_bytes()
-            physical = sched.memory.physical_resident_bytes()
-            for dev in sorted(set(logical) | set(physical)):
-                lo, ph = logical.get(dev, 0), physical.get(dev, 0)
-                if lo != ph:
-                    problems.append(
-                        f"device {dev}: logical residency {lo} B != "
-                        f"physically installed {ph} B")
-        return problems
+        physical = (quiescent
+                    and type(sched.executor).__name__ == "ThreadLaneExecutor")
+        report = sched.memory.verify(raise_on_drift=False, physical=physical)
+        self._drift_report = report
+        return list(report.problems)
 
     def sample_once(self, now: Optional[float] = None) -> MonitorSnapshot:
         with self._lock:
@@ -279,4 +277,7 @@ class RuntimeMonitor:
                 "monitor_mem_occupancy_ewma": self.occupancy_ewma.get(),
                 "monitor_drift_alarms": self.drift_alarms,
                 "monitor_drift_problems": list(self._drift_problems),
+                "monitor_drift_report": (self._drift_report.to_json()
+                                         if self._drift_report is not None
+                                         else None),
             }

@@ -53,7 +53,7 @@ class JobStore:
         with open(path, "rb") as fh:
             for raw in fh:
                 try:
-                    rec = json.loads(raw.decode("utf-8").strip() or "null")
+                    rec = json.loads(raw.decode().strip() or "null")
                     job = JobRecord.from_json(rec["job"])
                 except (ValueError, KeyError, TypeError, AttributeError):
                     # Crash frontier: a half-written trailing record.  Only
@@ -149,6 +149,20 @@ class JobStore:
                 self._fh.close()
             os.replace(tmp, self.path)
             self._fh = open(self.path, "a", encoding="utf-8")
+
+    def audit(self):
+        """Replay the journal through the lifecycle auditor
+        (:func:`repro.analysis.journal.audit_journal`) without mutating it.
+        Flushes pending appends first so the audit sees the live tail.
+        Returns the :class:`JournalAudit`; raises when the store is
+        in-memory only (nothing on disk to audit)."""
+        if self.path is None:
+            raise ValueError("in-memory JobStore has no journal to audit")
+        with self._lock:
+            if self._fh is not None:
+                self._fh.flush()
+        from ..analysis.journal import audit_journal
+        return audit_journal(self.path)
 
     def close(self, *, compact: bool = True) -> None:
         if compact:

@@ -21,7 +21,7 @@ class ProtocolError(RuntimeError):
 
 
 def send_msg(sock: socket.socket, obj) -> None:
-    payload = json.dumps(obj).encode("utf-8")
+    payload = json.dumps(obj).encode()
     if len(payload) > MAX_MESSAGE_BYTES:
         raise ProtocolError(f"message of {len(payload)} bytes exceeds the "
                             f"{MAX_MESSAGE_BYTES}-byte frame limit")
@@ -50,4 +50,4 @@ def recv_msg(sock: socket.socket):
     payload = _recv_exact(sock, n)
     if payload is None:
         raise ProtocolError("connection closed mid-frame")
-    return json.loads(payload.decode("utf-8"))
+    return json.loads(payload.decode())

@@ -37,9 +37,9 @@ def _verify_memory_accounting(monkeypatch):
     def sync_and_verify(self, *a, **kw):
         out = orig_sync(self, *a, **kw)
         if type(self.executor).__name__ == "SimExecutor":
-            problems = self.memory.verify()
-            assert not problems, \
-                f"memory accounting drift at sync: {problems}"
+            report = self.memory.verify(raise_on_drift=False)
+            assert report.ok, \
+                f"memory accounting drift at sync: {report}"
         return out
 
     monkeypatch.setattr(GrScheduler, "sync", sync_and_verify)

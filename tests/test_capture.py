@@ -28,7 +28,7 @@ def _episode(s, n=1024, cost=1e-4, tag=""):
 
 def test_capture_records_then_replays():
     s = make_scheduler("parallel", simulate=True)
-    for ep in range(4):
+    for _ep in range(4):
         with s.capture("vec"):
             _episode(s)
         s.sync()
@@ -42,7 +42,7 @@ def test_capture_records_then_replays():
 
 def test_plan_cache_keyed_by_argument_shapes():
     s = make_scheduler("parallel", simulate=True)
-    for ep in range(2):
+    for _ep in range(2):
         for n in (256, 512):
             with s.capture("vec"):
                 _episode(s, n=n)
@@ -139,7 +139,7 @@ def test_replay_bit_identical_on_real_executor():
     ref = run_eager()
     s = make_scheduler("parallel")
     try:
-        for ep in range(3):
+        for _ep in range(3):
             rng = np.random.RandomState(7)
             x1 = s.array(rng.randn(512).astype(np.float32))
             x2 = s.array(rng.randn(512).astype(np.float32))
@@ -172,7 +172,7 @@ def test_replay_bit_identical_on_benchmarks(bname):
         s_eager.shutdown()
     s = make_scheduler("parallel")
     try:
-        for ep in range(3):
+        for _ep in range(3):
             with s.capture(bname):
                 outs = bench.build(s, data, gpu=None, iters=1)
             for k in ref:
@@ -191,7 +191,7 @@ def test_replay_orders_against_prior_work_on_same_arrays():
     s = make_scheduler("parallel")
     try:
         x = s.array(np.zeros(64, np.float32), name="x")
-        for ep in range(4):
+        for _ep in range(4):
             with s.capture("inc"):
                 s.launch(addc, [inout(x)], name="INC")
         assert float(np.asarray(x)[0]) == 4.0
@@ -241,7 +241,7 @@ def test_host_write_mid_replay_demotes_to_eager():
         s = make_scheduler("parallel")
         try:
             outs = []
-            for ep in range(3):
+            for _ep in range(3):
                 x = s.array(np.full(64, 1.0, np.float32), name="x")
                 z1 = s.array(shape=(64,), dtype=np.float32, name="z1")
                 z2 = s.array(shape=(64,), dtype=np.float32, name="z2")
@@ -302,7 +302,7 @@ def test_host_read_mid_record_blocks_plan_storage():
     s.sync()
     assert s.stats()["plan_records"] == 0      # racy plan not cached
     # trailing read: harmless, plan stored and replayable
-    for ep in range(2):
+    for _ep in range(2):
         with s.capture("tailread"):
             x = s.array(np.ones(256, np.float32), name="x2")
             y = s.array(shape=(256,), dtype=np.float32, name="y2")
@@ -435,7 +435,7 @@ def test_unhashable_config_values_are_capturable():
     """Launch kwargs the eager path accepts (lists, dicts) must not break
     plan recording, matching, or replayed-element configs."""
     s = make_scheduler("parallel", simulate=True)
-    for ep in range(3):
+    for _ep in range(3):
         x = s.array(np.ones(256, np.float32))
         y = s.array(shape=(256,), dtype=np.float32)
         with s.capture("cfg"):

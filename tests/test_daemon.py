@@ -556,7 +556,7 @@ def test_server_sheds_under_sustained_overload_admits_when_calm(tmp_path):
             # overload: burst to build depth, pause a beat for the monitor
             # to see the step change, then keep pushing into the cooldown
             outcomes = []
-            for wave in range(3):
+            for _wave in range(3):
                 for _ in range(10):
                     outcomes.append(c.submit(
                         "sleep", {"total_s": 0.3, "steps": 3}))

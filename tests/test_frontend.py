@@ -199,7 +199,8 @@ def test_nested_runtime_contexts_inner_wins_and_unwind():
             f(xi)
         assert gr.get_runtime() is outer    # inner popped, outer restored
         f(xo)
-        outer.sync(), inner.sync()
+        outer.sync()
+        inner.sync()
         assert len(kernels_in(outer)) == 1
         assert len(kernels_in(inner)) == 1
     with pytest.raises(gr.NoActiveRuntimeError):

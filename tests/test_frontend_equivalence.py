@@ -48,7 +48,7 @@ def random_program(seed: int, n_arrays: int = 6, n_kernels: int = 14):
     rng = np.random.RandomState(seed)
     names = sorted(_templates())
     prog = []
-    for i in range(n_kernels):
+    for _i in range(n_kernels):
         tname = names[rng.randint(len(names))]
         modes, _ = _templates()[tname]
         idxs = rng.choice(n_arrays, size=len(modes), replace=False)

@@ -58,7 +58,7 @@ def assert_stack_conservation(sched, arrays):
            + sum(t.resident_bytes for t in sched.memory.tiers
                  if t.location == "host"))
     assert got == expect, f"stack: tracked {got} != actual {expect}"
-    assert sched.memory.verify() == []
+    assert sched.memory.verify().ok
 
 
 # ======================================================================
@@ -458,7 +458,7 @@ def test_concurrent_sync_vs_launch_stress():
         # completed, values correct.
         assert not s.dag.frontier
         assert not s._elements
-        for tid, outs in results.items():
+        for _tid, outs in results.items():
             for val, _x, arr in outs:
                 assert np.allclose(np.asarray(arr), 2.0 * val + 1.0)
         arrays = [a for outs in results.values()

@@ -267,7 +267,7 @@ def test_concurrent_submitters_real_executor_values():
             t.join()
         s.sync()
         assert not errs
-        for tid, x in arrays.items():
+        for _tid, x in arrays.items():
             np.testing.assert_allclose(np.asarray(x), float(per))
     finally:
         s.shutdown()

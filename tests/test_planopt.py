@@ -219,7 +219,7 @@ def test_optimized_budgeted_replay_correct_on_real_executor():
         assert plans and plans[0].optimized and plans[0].mem_scheduled
         assert st["mem_evicts_scheduled"] > 0
         assert verify_outofcore(arrs)
-        assert not s.memory.verify(), s.memory.verify()
+        assert s.memory.verify().ok
     finally:
         s.shutdown()
 

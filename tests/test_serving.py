@@ -111,7 +111,7 @@ def test_weighted_fair_keeps_shape_batches_intact():
     eng.submit(rng.randint(0, 100, 8), 4, tenant="b", priority=1)
     eng.flush()
     assert len(seen) == 3                      # no cross-shape/tenant merge
-    for plen, ntok, tenant, prio, tenants, plens in seen:
+    for plen, ntok, tenant, _prio, tenants, plens in seen:
         assert all(t == tenant for t in tenants)
         assert all(p == plen for p in plens)
 

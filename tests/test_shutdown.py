@@ -132,7 +132,7 @@ def test_stats_and_tenant_stats_consistent_under_concurrent_launches():
             while not stop.is_set():
                 _stats_invariants(s.stats())
                 ts = s.tenant_stats()
-                for t, d in ts.items():
+                for _t, d in ts.items():
                     assert d["elements"] >= 1
                     assert d["busy_s"] >= 0.0
         except Exception as exc:            # surfaced below

@@ -98,7 +98,7 @@ def test_stack_miss_falls_back_to_flat_d2h():
     assert st["mem_tiers"]["compressed-host"]["spills"] == 0
     assert all(a.backing_tier is None
                for a in arrays["x"] + arrays["y"] + arrays["z"])
-    assert s.memory.verify() == []
+    assert s.memory.verify().ok
 
 
 # ======================================================================
@@ -126,7 +126,7 @@ def test_peer_tier_sim_strictly_beats_flat_d2h():
     # stage brings them back with a plain D2D).
     assert all(a.backing_tier is None
                for a in arrays["x"] + arrays["y"] + arrays["z"])
-    assert s_peer.memory.verify() == []
+    assert s_peer.memory.verify().ok
 
 
 def test_peer_tier_refuses_without_budget_room():
@@ -142,7 +142,7 @@ def test_peer_tier_refuses_without_budget_room():
     # Device 1's budget (1 chunk) can never hold a spill while also being
     # eligible: anything routed there would exceed its budget.
     assert s.memory.pools[1].resident_bytes <= CHUNK
-    assert s.memory.verify() == []
+    assert s.memory.verify().ok
 
 
 # ======================================================================
@@ -161,7 +161,7 @@ def test_disk_tier_real_roundtrip_bit_exact(tmp_path):
         for x, z in zip(arrays["x"], arrays["z"]):
             expect = np.asarray(x.host, np.float32) * 4.0 + 3.0
             np.testing.assert_array_equal(np.asarray(z), expect)
-        assert s.memory.verify() == []
+        assert s.memory.verify().ok
     finally:
         s.shutdown()
     # Satellite 2: no leaked spool files after shutdown.
@@ -179,7 +179,7 @@ def test_compressed_lossless_real_roundtrip_bit_exact():
         for x, z in zip(arrays["x"], arrays["z"]):
             expect = np.asarray(x.host, np.float32) * 4.0 + 3.0
             np.testing.assert_array_equal(np.asarray(z), expect)
-        assert s.memory.verify() == []
+        assert s.memory.verify().ok
     finally:
         s.shutdown()
 
@@ -200,7 +200,7 @@ def test_compressed_lossy_real_roundtrip_within_bf16_bound():
             expect = np.asarray(x.host, np.float32) * 4.0 + 3.0
             # One lossy hop per value at most (y spilled, z = 2*y + 1).
             assert np.max(np.abs(np.asarray(z) - expect)) <= 2 * bound + 1e-7
-        assert s.memory.verify() == []
+        assert s.memory.verify().ok
     finally:
         s.shutdown()
 
@@ -218,7 +218,7 @@ def test_peer_tier_real_roundtrip_bit_exact():
             np.testing.assert_array_equal(np.asarray(z), expect)
         s.sync()
         assert s.stats()["mem_tiers"]["peer-device"]["spills"] >= 1
-        assert s.memory.verify() == []
+        assert s.memory.verify().ok
     finally:
         s.shutdown()
 
@@ -238,7 +238,7 @@ def test_host_read_restores_through_tier():
         assert y.backing_tier == "compressed-host"
         np.testing.assert_array_equal(y.read(), np.full(N, 5.0, np.float32))
         assert y.backing_tier is None and y.host_valid
-        assert s.memory.verify() == []
+        assert s.memory.verify().ok
     finally:
         s.shutdown()
 
@@ -258,7 +258,7 @@ def test_stack_overflows_to_next_tier(tmp_path):
     assert st["compressed-host"]["spills"] >= 1
     assert st["disk"]["spills"] >= 1
     assert st["compressed-host"]["spilled_bytes_resident"] <= CHUNK
-    assert s.memory.verify() == []
+    assert s.memory.verify().ok
     s.shutdown()
 
 
@@ -280,7 +280,7 @@ def test_disk_spool_removed_on_gc(tmp_path):
         del y
         gc.collect()
         assert glob.glob(os.path.join(str(tmp_path), "blk_*")) == []
-        assert s.memory.verify() == []
+        assert s.memory.verify().ok
     finally:
         s.shutdown()
 
@@ -309,7 +309,7 @@ def test_pool_occupancy_and_verify_hook():
     assert tstats["spilled_bytes_resident"] == sum(
         a.nbytes for a in arrays["x"] + arrays["y"] + arrays["z"]
         if a.backing_tier == "compressed-host")
-    assert s.memory.verify() == []
+    assert s.memory.verify().ok
     # The unbounded default reports occupancy 0 (nothing to fill).
     s2 = make_scheduler("parallel", simulate=True)
     assert s2.memory.pools[0].stats()["occupancy"] == 0.0
@@ -352,7 +352,7 @@ def test_capture_replays_tier_spills():
                 y.read(), np.full(N, 2.0 * ep + 1.0, np.float32))
             np.testing.assert_array_equal(
                 y2.read(), np.full(N, 2.0 * (ep + 10) + 1.0, np.float32))
-        assert s.memory.verify() == []
+        assert s.memory.verify().ok
     finally:
         s.shutdown()
 
@@ -392,7 +392,7 @@ def test_save_managed_hard_links_disk_spills(tmp_path):
         mgr.restore_managed({"y": ny, "y2": ny2}, step=7)
         np.testing.assert_array_equal(ny.read(), expect_y)
         np.testing.assert_array_equal(ny2.read(), np.full(N, 3.0, np.float32))
-        assert s.memory.verify() == []
+        assert s.memory.verify().ok
     finally:
         s.shutdown()
 
@@ -418,7 +418,7 @@ def test_save_managed_reads_compressed_tier_nondestructively():
         mgr.restore_managed({"y": ny}, step=1)
         np.testing.assert_array_equal(
             ny.read(), np.arange(N, dtype=np.float32) * 2.0 + 1.0)
-        assert s.memory.verify() == []
+        assert s.memory.verify().ok
     finally:
         s.shutdown()
         import shutil
